@@ -1,0 +1,174 @@
+"""Reproduction of every table/figure in the paper, one function each.
+
+Each function returns rows of (name, us_per_call, derived) where ``derived``
+is the paper's headline metric for that figure, plus a claims list of
+(metric, paper_value, ours) so EXPERIMENTS.md can show deltas.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import dataflow as df
+from repro.core import scheduler
+
+Row = Tuple[str, float, float]
+
+
+# ---------------------------------------------------------------- Fig. 1
+def fig1_flops_efficiency() -> Tuple[List[Row], List[Tuple[str, float, float]]]:
+    """Measured FLOPS efficiency vs matrix size: TPU ~100 %, TC < 60 %."""
+    rows: List[Row] = []
+    for n in (512, 1024, 2048, 4096, 8192):
+        g = df.GemmShape(n, n, n, f"sq{n}")
+        tc = df.gemm_flops_efficiency(g, df.TC_4, measured=True)
+        tpu = df.gemm_flops_efficiency(g, df.TPU_CORE, measured=True)
+        rows.append((f"fig1.tc_eff.n{n}", df.gemm_time_us(g, df.TC_4), tc))
+        rows.append((f"fig1.tpu_eff.n{n}", df.gemm_time_us(g, df.TPU_CORE),
+                     tpu))
+    big = df.GemmShape(8192, 8192, 8192)
+    claims = [
+        ("fig1: TC measured efficiency (<0.60)", 0.58,
+         df.gemm_flops_efficiency(big, df.TC_4, measured=True)),
+        ("fig1: TPU measured efficiency (~1.0)", 0.97,
+         df.gemm_flops_efficiency(big, df.TPU_CORE, measured=True)),
+    ]
+    return rows, claims
+
+
+# ---------------------------------------------------------------- Fig. 3
+#: GEMM-incompatible op slowdown when force-lowered to GEMM engines, and the
+#: host-transfer model for CRF (calibrated to the paper's measured breakdown).
+def fig3_hybrid_models() -> Tuple[List[Row], List[Tuple[str, float, float]]]:
+    """TPU vs GPU on hybrid models: over-specialization backfires."""
+    rows: List[Row] = []
+    claims = []
+    # Mask R-CNN: TPU lowers RoIAlign/NMS to GEMM chains (no host hop).
+    gpu_gemm = sum(df.gemm_time_us(g, df.TC_4) for g in df.NETWORKS["MaskRCNN"])
+    gpu_simd = sum(df.simd_time_us(op, 64) for op in df.MASK_RCNN_SIMD_OPS)
+    tpu_gemm = sum(df.gemm_time_us(g, df.TPU_CORE)
+                   for g in df.NETWORKS["MaskRCNN"])
+    tpu_simd = sum(df.simd_time_us(op, 64) * op.gemm_lowering_penalty
+                   for op in df.MASK_RCNN_SIMD_OPS)
+    gpu_t, tpu_t = gpu_gemm + gpu_simd, tpu_gemm + tpu_simd
+    rows += [("fig3.maskrcnn.gpu", gpu_t, 1.0),
+             ("fig3.maskrcnn.tpu", tpu_t, tpu_t / gpu_t)]
+    claims.append(("fig3: Mask R-CNN TPU/GPU slowdown (~1.75)", 1.75,
+                   tpu_t / gpu_t))
+
+    # DeepLab: CRF is infeasible on the TPU -> host CPU round trip.  The
+    # paper separates CRF from the 2x-slowdown claim ("we separate the CRF
+    # time from the overall execution time"): the 2x comes from GEMM +
+    # transfer (= 1.2x of the TPU GEMM time) alone.
+    gpu_gemm = sum(df.gemm_time_us(g, df.TC_4) for g in df.NETWORKS["DeepLab"])
+    argmax_gpu = df.simd_time_us(df.DEEPLAB_SIMD_OPS[0], 64)
+    tpu_gemm = sum(df.gemm_time_us(g, df.TPU_CORE)
+                   for g in df.NETWORKS["DeepLab"])
+    transfer = 1.2 * tpu_gemm              # paper: transfer = 1.2x its GEMM
+    crf_gpu = df.simd_time_us(df.DEEPLAB_SIMD_OPS[1], 64)
+    crf_cpu = 10.0 * crf_gpu               # paper: 10x worse on 1-core CPU
+    gpu_t = gpu_gemm + argmax_gpu
+    tpu_t = tpu_gemm + transfer
+    rows += [("fig3.deeplab.gpu", gpu_t, 1.0),
+             ("fig3.deeplab.tpu_excl_crf", tpu_t, tpu_t / gpu_t),
+             ("fig3.deeplab.crf_cpu", crf_cpu, crf_cpu / crf_gpu)]
+    claims.append(("fig3: DeepLab TPU/GPU slowdown excl. CRF (~2.0)", 2.0,
+                   tpu_t / gpu_t))
+    claims.append(("fig3: TPU faster than GPU on DeepLab GEMMs (>1.6x)", 1.6,
+                   gpu_gemm / tpu_gemm))
+    return rows, claims
+
+
+# ---------------------------------------------------------------- Fig. 7
+def fig7_isoflop() -> Tuple[List[Row], List[Tuple[str, float, float]]]:
+    rows: List[Row] = []
+    speedups, tpu_slow = [], []
+    for n in (1024, 2048, 4096, 8192):
+        g = df.GemmShape(n, n, n)
+        t_tc = df.gemm_time_us(g, df.TC_4)
+        t_sma = df.gemm_time_us(g, df.SMA_2)
+        t_tpuws = df.gemm_time_us(g, df.TPU_WS_2)
+        rows.append((f"fig7.sma_vs_tc.n{n}", t_sma, t_tc / t_sma))
+        rows.append((f"fig7.tpuws_vs_sma.n{n}", t_tpuws, t_tpuws / t_sma))
+        speedups.append(t_tc / t_sma)
+        tpu_slow.append(t_tpuws / t_sma)
+    g = df.GemmShape(4096, 4096, 4096)
+    claims = [
+        ("fig7: 2-SMA speedup over 4-TC iso-FLOP (~1.30)", 1.30,
+         float(np.mean(speedups))),
+        ("fig7: SMA FLOP efficiency (>0.90)", 0.90,
+         df.gemm_flops_efficiency(g, df.SMA_2)),
+        ("fig7: TPU-WS dataflow slowdown (1.2-1.4)", 1.30,
+         float(np.mean(tpu_slow))),
+    ]
+    return rows, claims
+
+
+# ---------------------------------------------------------------- Fig. 8
+def fig8_isoarea() -> Tuple[List[Row], List[Tuple[str, float, float]]]:
+    rows: List[Row] = []
+    sp3, sp2, e3, e2 = [], [], [], []
+    for name in df.NETWORKS:
+        t_tc = df.network_time(name, df.TC_4, simd_lanes_when_general=64)
+        t_s2 = df.network_time(name, df.SMA_2, simd_lanes_when_general=128)
+        t_s3 = df.network_time(name, df.SMA_3, simd_lanes_when_general=192)
+        rows.append((f"fig8.{name}.4tc", t_tc.total_us, 1.0))
+        rows.append((f"fig8.{name}.2sma", t_s2.total_us,
+                     t_tc.total_us / t_s2.total_us))
+        rows.append((f"fig8.{name}.3sma", t_s3.total_us,
+                     t_tc.total_us / t_s3.total_us))
+        rows.append((f"fig8.{name}.energy3", t_s3.energy_mj,
+                     t_s3.energy_mj / t_tc.energy_mj))
+        sp3.append(t_tc.total_us / t_s3.total_us)
+        sp2.append(t_tc.total_us / t_s2.total_us)
+        e3.append(t_s3.energy_mj / t_tc.energy_mj)
+        e2.append(t_s2.energy_mj / t_tc.energy_mj)
+    claims = [
+        ("fig8: 3-SMA speedup over baseline (~1.63)", 1.63,
+         float(np.mean(sp3))),
+        ("fig8: 2-SMA speedup (~1.22)", 1.22, float(np.mean(sp2))),
+        ("fig8: 3-SMA energy ratio (~0.77)", 0.77, float(np.mean(e3))),
+        ("fig8: 2-SMA energy ratio (~0.88)", 0.88, float(np.mean(e2))),
+    ]
+    return rows, claims
+
+
+# ---------------------------------------------------------------- Fig. 9
+def fig9_driving() -> Tuple[List[Row], List[Tuple[str, float, float]]]:
+    t = scheduler.fig9_table()
+    rows = []
+    for p, row in t.items():
+        rows.append((f"fig9.{p}.n1", row["frame_ms_n1"] * 1e3,
+                     float(row["meets_target_n1"])))
+        rows.append((f"fig9.{p}.n4", row["frame_ms_n4"] * 1e3,
+                     row["frame_ms_n1"] / max(row["frame_ms_n4"], 1e-9)))
+    claims = [
+        ("fig9: GPU exceeds 100ms target", 1.0,
+         float(t["GPU"]["frame_ms_n1"] > 100)),
+        ("fig9: SMA meets 100ms target", 1.0,
+         float(t["SMA"]["meets_target_n1"])),
+        ("fig9: SMA N=4 latency reduction (~0.5)", 0.50,
+         t["SMA"]["latency_reduction_n4"]),
+    ]
+    return rows, claims
+
+
+# ------------------------------------------------------------- area (V-A)
+def area_overhead() -> Tuple[List[Row], List[Tuple[str, float, float]]]:
+    controller_bytes = 8 * 8 + 24 * 8          # A_in + C_out latches
+    sm_sram = 256 * 1024 + 128 * 1024          # RF + shared memory per SM
+    frac = controller_bytes / sm_sram
+    rows = [("area.controller_bytes", float(controller_bytes), frac)]
+    claims = [("V-A: area overhead (<0.001)", 0.001, frac)]
+    return rows, claims
+
+
+ALL_FIGS = {
+    "fig1": fig1_flops_efficiency,
+    "fig3": fig3_hybrid_models,
+    "fig7": fig7_isoflop,
+    "fig8": fig8_isoarea,
+    "fig9": fig9_driving,
+    "area": area_overhead,
+}

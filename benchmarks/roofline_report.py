@@ -1,0 +1,72 @@
+"""Aggregate results/dryrun/*.json into the §Roofline / §Dry-run tables."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+
+COLUMNS = ("arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+           "dominant", "useful", "roofline_frac", "GB/dev")
+
+
+def load_records(tag: str = "") -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        has_tag = "__" in base and base.count("__") >= 3
+        if tag and not base.endswith(f"__{tag}"):
+            continue
+        if not tag and has_tag:
+            continue
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def rows(tag: str = "", mesh: Optional[str] = None) -> List[Tuple]:
+    out = []
+    for rec in load_records(tag):
+        if mesh and rec["mesh"] != mesh:
+            continue
+        r = rec["roofline"]
+        out.append((
+            rec["arch"], rec["shape"], rec["mesh"],
+            r["compute_s"], r["memory_s"], r["collective_s"],
+            r["dominant"], r["useful_flops_ratio"], r["roofline_fraction"],
+            rec["memory"]["bytes_per_device"] / 1e9,
+        ))
+    return out
+
+
+def format_table(tag: str = "", mesh: Optional[str] = None) -> str:
+    lines = ["| " + " | ".join(COLUMNS) + " |",
+             "|" + "|".join(["---"] * len(COLUMNS)) + "|"]
+    for row in rows(tag, mesh):
+        cells = []
+        for v in row:
+            if isinstance(v, float):
+                cells.append(f"{v:.4g}")
+            else:
+                cells.append(str(v))
+        lines.append("| " + " | ".join(cells) + " |")
+    return "\n".join(lines)
+
+
+def csv_rows(tag: str = "") -> List[Tuple[str, float, float]]:
+    """(name, us_per_call=bound_s*1e6, derived=roofline_fraction)."""
+    out = []
+    for rec in load_records(tag):
+        r = rec["roofline"]
+        name = f"roofline.{rec['arch']}.{rec['shape']}.{rec['mesh']}"
+        if rec.get("tag"):
+            name += f".{rec['tag']}"
+        out.append((name, r["bound_s"] * 1e6, r["roofline_fraction"]))
+    return out
+
+
+if __name__ == "__main__":
+    print(format_table())

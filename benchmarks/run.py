@@ -1,0 +1,42 @@
+"""Benchmark harness: one function per paper table/figure + kernel/roofline
+rows.  Prints ``name,us_per_call,derived`` CSV, then the claims scoreboard.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-kernels", action="store_true",
+                    help="skip wall-clock kernel benches (CPU-heavy)")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import paper_figs, roofline_report
+
+    rows = []
+    claims = []
+    for name, fn in paper_figs.ALL_FIGS.items():
+        r, c = fn()
+        rows += r
+        claims += c
+
+    if not args.skip_kernels:
+        from benchmarks import kernel_bench
+        rows += kernel_bench.all_rows()
+
+    rows += roofline_report.csv_rows()
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived:.4f}")
+
+    print("\n# paper-claims scoreboard (claim, paper, ours, |delta|%)")
+    for metric, paper, ours in claims:
+        delta = abs(ours - paper) / abs(paper) * 100 if paper else 0.0
+        print(f"# {metric}: paper={paper:.3f} ours={ours:.3f} "
+              f"delta={delta:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

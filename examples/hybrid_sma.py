@@ -1,0 +1,110 @@
+"""The paper's hybrid-model story, end to end.
+
+Builds a hybrid workload (GEMM backbone + GEMM-incompatible ops: top-k
+proposal selection à la NMS, gather-based RoI pooling, an iterative
+CRF-like refinement) and runs it three ways:
+
+  1. **JAX/SMA execution** — the real computation, with the SMA policy
+     planning temporal modes and fusion (what the framework does on TPU).
+  2. **Analytical platform comparison** — the same workload on the paper's
+     three platforms (GPU+TC baseline, GEMM-only lowering à la TPU, SMA),
+     via the calibrated dataflow model: Fig. 2/3/8 in one script.
+
+Run:  PYTHONPATH=src python examples/hybrid_sma.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import SMAPolicy, dataflow as df
+from repro.core.modes import ExecMode, Op, OpKind
+
+# ---------------------------------------------------------------------------
+# 1) A hybrid model in JAX: backbone GEMMs + NMS-like + CRF-like ops.
+# ---------------------------------------------------------------------------
+key = jax.random.PRNGKey(0)
+B, HW, C_dim, N_cls, N_prop = 4, 1024, 256, 21, 64
+
+feats = jax.random.normal(key, (B, HW, C_dim))
+w1 = jax.random.normal(jax.random.PRNGKey(1), (C_dim, C_dim)) / C_dim ** 0.5
+w2 = jax.random.normal(jax.random.PRNGKey(2), (C_dim, N_cls)) / C_dim ** 0.5
+
+
+@jax.jit
+def hybrid_forward(feats):
+    # systolic mode: backbone
+    h = jax.nn.relu(feats @ w1)
+    logits = h @ w2                                   # (B, HW, N_cls)
+    # SIMD mode: proposal scoring + top-k (the NMS/RegionProposal analogue)
+    scores = jax.nn.softmax(logits, -1).max(-1)       # (B, HW)
+    top_scores, top_idx = jax.lax.top_k(scores, N_prop)
+    # SIMD mode: gather-based RoI pooling (RoIAlign analogue)
+    pooled = jnp.take_along_axis(h, top_idx[..., None], axis=1)
+    # SIMD mode: CRF-like iterative refinement (message passing)
+    def body(i, q):
+        msg = q @ (w2.T @ w2) / N_cls                 # pairwise potential
+        return jax.nn.softmax(jnp.log(q + 1e-9) - 0.1 * msg, -1)
+    q0 = jax.nn.softmax(logits, -1)
+    q = jax.lax.fori_loop(0, 5, body, q0)
+    return q.argmax(-1), pooled, top_scores
+
+
+labels, pooled, top_scores = hybrid_forward(feats)
+print(f"[hybrid] JAX forward: labels {labels.shape}, "
+      f"pooled {pooled.shape}, proposals {top_scores.shape}")
+
+# ---------------------------------------------------------------------------
+# 2) SMA policy plan for this workload.
+# ---------------------------------------------------------------------------
+tok = float(B * HW)
+plan = [
+    Op("backbone_fc1", OpKind.MATMUL, flops=2 * tok * C_dim * C_dim,
+       bytes_in=tok * C_dim * 4),
+    Op("relu", OpKind.ELEMENTWISE, flops=tok * C_dim, bytes_in=tok * C_dim * 4),
+    Op("cls_head", OpKind.MATMUL, flops=2 * tok * C_dim * N_cls),
+    Op("softmax_scores", OpKind.REDUCTION, flops=5 * tok * N_cls,
+       bytes_in=tok * N_cls * 4),
+    Op("topk_proposals", OpKind.TOPK, flops=tok * 10, tile_local=False),
+    Op("roi_gather", OpKind.GATHER_SCATTER, flops=0.0, tile_local=False),
+    Op("crf_refine", OpKind.RECURRENCE, flops=5 * 2 * tok * N_cls * N_cls,
+       tile_local=False),
+    Op("argmax", OpKind.REDUCTION, flops=tok * N_cls, tile_local=False),
+]
+summary = SMAPolicy().summarize(plan)
+hist_flops = {m.value: f"{v:.1%}" for m, v in
+              __import__("repro.core.modes", fromlist=["mode_histogram"])
+              .mode_histogram(plan).items()}
+print(f"[hybrid] mode mix (FLOPs): {hist_flops}")
+print(f"[hybrid] plan: {summary.groups} groups, "
+      f"{summary.mode_switches} temporal mode switches, "
+      f"{summary.fused_simd_ops} fused SIMD epilogues, "
+      f"{summary.hbm_bytes_avoided/1e6:.1f} MB HBM avoided")
+
+# ---------------------------------------------------------------------------
+# 3) Platform comparison via the calibrated dataflow model (paper Fig. 3/8).
+# ---------------------------------------------------------------------------
+gemms = [df.GemmShape(int(tok), C_dim, C_dim, "fc1"),
+         df.GemmShape(int(tok), N_cls, C_dim, "cls")]
+simd_ops = [
+    df.SimdOp("topk/NMS", flops=tok * 10, bytes=tok * 8,
+              gemm_lowering_penalty=6.0, serial_fraction=1e-6),
+    df.SimdOp("roi_gather", flops=tok, bytes=N_prop * B * C_dim * 8,
+              gemm_lowering_penalty=3.0),
+    df.SimdOp("crf", flops=5 * 2 * tok * N_cls * N_cls, bytes=tok * N_cls * 8,
+              gemm_lowering_penalty=25.0),
+]
+
+gemm_tc = sum(df.gemm_time_us(g, df.TC_4) for g in gemms)
+gemm_sma = sum(df.gemm_time_us(g, df.SMA_3) for g in gemms)
+simd_base = sum(df.simd_time_us(op, 64) for op in simd_ops)
+simd_sma = sum(df.simd_time_us(op, 192) for op in simd_ops)
+simd_lowered = sum(df.simd_time_us(op, 64) * op.gemm_lowering_penalty
+                   for op in simd_ops)
+
+base = gemm_tc + simd_base
+lowered = gemm_sma + simd_lowered        # GEMM-only engine, ops contorted
+sma = gemm_sma + simd_sma                # temporal multi-mode
+print(f"[hybrid] baseline GPU+TC    : {base:8.1f} us  (1.00x)")
+print(f"[hybrid] GEMM-only lowering : {lowered:8.1f} us  "
+      f"({base/lowered:.2f}x)   <- the paper's TPU failure mode")
+print(f"[hybrid] SMA temporal modes : {sma:8.1f} us  ({base/sma:.2f}x)")
+assert sma < base < lowered

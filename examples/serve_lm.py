@@ -1,0 +1,67 @@
+"""Serving example: continuous batching over a trained model.
+
+Trains a tiny LM briefly (so generations aren't pure noise), then serves a
+stream of requests through the slot-based batched decoder — prefill-by-warmup,
+per-tick decode for all active slots, slot reuse as requests complete.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import dataclasses
+import time
+
+import numpy as np
+
+import repro.configs as C
+from repro.data.pipeline import DataConfig, make_batch, _bigram_params
+from repro.launch.serve import Request, Server
+from repro.launch.train import TrainLoopConfig, train
+
+# Small model, briefly trained on the deterministic bigram corpus.
+cfg = dataclasses.replace(
+    C.get_config("stablelm-1.6b"), name="serve-demo",
+    num_groups=2, d_model=128, num_heads=4, num_kv_heads=4, head_dim=32,
+    d_ff=256, vocab_size=256, dtype="float32", param_dtype="float32")
+print("[serve_lm] training a small model first (60 steps)...")
+out = train(cfg, TrainLoopConfig(steps=60, seq_len=64, global_batch=8,
+                                 log_every=30, peak_lr=3e-3))
+params = out["params"]
+
+server = Server(cfg, params, slots=4, cache_size=96)
+# the trainer's data pipeline keys the bigram map off the *loop* seed (0)
+a, c = _bigram_params(0, cfg.vocab_size)
+rng = np.random.RandomState(0)
+
+# Prompts drawn from the training distribution; a trained model should
+# continue them along the bigram map.
+requests = []
+for i in range(8):
+    start = rng.randint(0, cfg.vocab_size)
+    prompt = [start]
+    for _ in range(7):
+        prompt.append((a * prompt[-1] + c) % cfg.vocab_size)
+    requests.append(Request(rid=i, prompt=np.array(prompt, np.int32),
+                            max_new_tokens=8))
+
+pending = list(requests)
+t0 = time.time()
+ticks = 0
+while pending or server.active:
+    while pending and server.admit(pending[0]):
+        pending.pop(0)
+    server.tick()
+    ticks += 1
+dt = time.time() - t0
+print(f"[serve_lm] served {len(requests)} requests in {ticks} ticks "
+      f"({dt:.1f}s)")
+
+correct = total = 0
+for req in requests:
+    expected = req.prompt[-1]
+    for tok in req.out_tokens:
+        expected = (a * expected + c) % cfg.vocab_size
+        correct += int(tok == expected)
+        total += 1
+print(f"[serve_lm] bigram-continuation accuracy of generations: "
+      f"{correct}/{total} = {correct/total:.2f}")
+print("[serve_lm] sample:", requests[0].prompt.tolist(), "->",
+      requests[0].out_tokens)

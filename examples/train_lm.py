@@ -1,0 +1,59 @@
+"""End-to-end training driver example.
+
+Trains a decoder LM on the deterministic bigram corpus with the full
+substrate: data pipeline -> model -> AdamW -> checkpointing (auto-resume) ->
+optional gradient compression.
+
+Default: a ~10M-parameter stablelm-family model for 300 steps — sized so one
+CPU core finishes in minutes while exercising exactly the code path a ~100M+
+run uses; pass ``--preset 100m`` on real hardware (the same command on a TPU
+pod with ``repro.launch.train``'s mesh wiring trains the full configs).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300] [--preset 10m]
+"""
+import argparse
+import dataclasses
+
+import repro.configs as C
+from repro.launch.train import TrainLoopConfig, train
+
+PRESETS = {
+    # name: (d_model, layers, heads, d_ff, vocab, seq, batch) ~ param count
+    "2m": (128, 4, 4, 512, 2048, 128, 8),
+    "10m": (256, 8, 8, 1024, 8192, 128, 8),
+    "100m": (768, 12, 12, 3072, 32768, 512, 32),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="2m", choices=sorted(PRESETS))
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--grad-compression", action="store_true")
+    args = ap.parse_args()
+
+    d, layers, heads, ff, vocab, seq, batch = PRESETS[args.preset]
+    cfg = dataclasses.replace(
+        C.get_config("stablelm-1.6b"),
+        name=f"lm-{args.preset}",
+        num_groups=layers,
+        d_model=d, num_heads=heads, num_kv_heads=heads,
+        head_dim=d // heads, d_ff=ff, vocab_size=vocab,
+        dtype="float32", param_dtype="float32",
+    )
+    n_params = cfg.param_count()
+    print(f"[example] {cfg.name}: ~{n_params/1e6:.1f}M params, "
+          f"{layers} layers, seq {seq}, batch {batch}")
+    out = train(cfg, TrainLoopConfig(
+        steps=args.steps, seq_len=seq, global_batch=batch, log_every=20,
+        checkpoint_dir=args.checkpoint_dir, checkpoint_every=100,
+        grad_compression=args.grad_compression, peak_lr=1e-3))
+    first, last = out["history"][0], out["history"][-1]
+    print(f"[example] loss {first['loss']:.3f} -> {last['loss']:.3f} "
+          f"(accuracy {last['accuracy']:.3f}) in {last['wall_s']}s")
+    assert last["loss"] < first["loss"], "training must make progress"
+
+
+if __name__ == "__main__":
+    main()

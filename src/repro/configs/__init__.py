@@ -1,0 +1,15 @@
+"""Architecture configs: one module per assigned architecture.
+
+``repro.configs.base.get_config(name)`` imports on demand;
+importing this package eagerly registers all of them.
+"""
+from repro.configs import (dbrx_132b, deepseek_67b, deepseek_coder_33b,
+                           internvl2_2b, mistral_nemo_12b, musicgen_large,
+                           qwen3_moe_30b_a3b, recurrentgemma_2b,
+                           stablelm_1_6b, xlstm_1_3b)
+from repro.configs.base import (ARCH_IDS, REGISTRY, SHAPES, ModelConfig,
+                                MoEConfig, ShapeConfig, applicable_shapes,
+                                get_config, reduced)
+
+__all__ = ["ARCH_IDS", "REGISTRY", "SHAPES", "ModelConfig", "MoEConfig",
+           "ShapeConfig", "applicable_shapes", "get_config", "reduced"]

@@ -1,0 +1,208 @@
+"""Config system: model architecture + parallelism + run configuration.
+
+Every assigned architecture is a :class:`ModelConfig` in its own module under
+``repro.configs`` and registers itself in :data:`REGISTRY` (selectable via
+``--arch <id>`` in the launchers).  ``reduced()`` derives the CPU-smoke-test
+variant of any config (same family, tiny dims).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+# Block-type vocabulary for the unified decoder LM.  A config's
+# ``block_pattern`` is repeated ``num_groups`` times; the total layer count is
+# num_groups * len(block_pattern).
+#   "attn"      full causal attention + MLP (dense or MoE per cfg.moe)
+#   "local"     sliding-window attention + MLP
+#   "rglru"     Griffin recurrent block (conv1d + RG-LRU) + MLP
+#   "mlstm"     xLSTM matrix-memory block (internal up/down projection)
+#   "slstm"     xLSTM scalar-memory block (internal FF)
+BLOCK_TYPES = ("attn", "local", "rglru", "mlstm", "slstm")
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    lb_loss_coef: float = 0.01
+    z_loss_coef: float = 1e-3
+    norm_topk_prob: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # moe | dense | audio | ssm | hybrid | vlm
+    block_pattern: Tuple[str, ...]
+    num_groups: int                   # pattern repetitions (scan length)
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None    # default d_model // num_heads
+    moe: Optional[MoEConfig] = None
+    window: Optional[int] = None      # sliding-window size for "local" blocks
+    rope_theta: float = 10000.0
+    # Input modality: "tokens" | "embeds" (audio stub) | "tokens+vision" (vlm)
+    input_mode: str = "tokens"
+    num_vision_tokens: int = 0        # for tokens+vision
+    # xLSTM specifics
+    mlstm_proj_factor: float = 2.0
+    mlstm_chunk: int = 128
+    # numerics
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    logits_softcap: Optional[float] = None
+    # notes for DESIGN/EXPERIMENTS
+    source: str = ""
+
+    @property
+    def num_layers(self) -> int:
+        return self.num_groups * len(self.block_pattern)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def activation_dtype(self) -> jnp.dtype:
+        return jnp.dtype(self.dtype)
+
+    @property
+    def parameter_dtype(self) -> jnp.dtype:
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True if decode state is O(1)/windowed (no full-attention KV)."""
+        return all(b in ("rglru", "mlstm", "slstm", "local")
+                   for b in self.block_pattern)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        n_q, n_kv = self.num_heads, self.num_kv_heads
+        total = self.vocab_size * d  # embedding (tied head adds below)
+        for block in self.block_pattern * self.num_groups:
+            if block in ("attn", "local"):
+                total += d * hd * (n_q + 2 * n_kv) + n_q * hd * d  # qkvo
+                if self.moe is not None:
+                    total += self.moe.num_experts * (
+                        3 * d * self.moe.d_ff_expert) + d * self.moe.num_experts
+                else:
+                    total += 3 * d * self.d_ff  # gated MLP
+                total += 2 * d  # norms
+            elif block == "rglru":
+                lru = d  # recurrence width
+                total += d * 2 * lru + lru * 4 + lru * d  # in/gate proj + conv/gates + out
+                total += 3 * d * self.d_ff + 2 * d
+            elif block == "mlstm":
+                inner = int(d * self.mlstm_proj_factor)
+                total += d * 2 * inner + 3 * inner * inner // 1 + inner * d
+                total += 2 * d
+            elif block == "slstm":
+                h = self.num_heads
+                dh = d // h
+                total += 4 * d * d + 4 * h * dh * dh + d * self.d_ff * 2 + 2 * d
+        total += d * self.vocab_size  # LM head (untied)
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only top-k experts)."""
+        if self.moe is None:
+            return self.param_count()
+        full = self.param_count()
+        per_expert = 3 * self.d_model * self.moe.d_ff_expert
+        experts_total = self.num_layers * self.moe.num_experts * per_expert
+        experts_active = self.num_layers * self.moe.top_k * per_expert
+        return full - experts_total + experts_active
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+ARCH_IDS = (
+    "dbrx-132b",
+    "qwen3-moe-30b-a3b",
+    "musicgen-large",
+    "mistral-nemo-12b",
+    "deepseek-coder-33b",
+    "deepseek-67b",
+    "stablelm-1.6b",
+    "xlstm-1.3b",
+    "recurrentgemma-2b",
+    "internvl2-2b",
+)
+
+REGISTRY: Dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    """Load an architecture config by id (imports its module on demand)."""
+    if name not in REGISTRY:
+        mod = name.replace("-", "_").replace(".", "_")
+        importlib.import_module(f"repro.configs.{mod}")
+    return REGISTRY[name]
+
+
+def applicable_shapes(cfg: ModelConfig) -> Tuple[str, ...]:
+    """Shape cells that run for this arch (long_500k needs sub-quadratic)."""
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.supports_long_context:
+        names.append("long_500k")
+    return tuple(names)
+
+
+def reduced(cfg: ModelConfig, *, seq_len: int = 64) -> ModelConfig:
+    """Tiny same-family variant for CPU smoke tests."""
+    if cfg.num_kv_heads == 1:
+        kv = 1  # preserve MQA
+    elif cfg.num_kv_heads == cfg.num_heads:
+        kv = 4  # preserve MHA
+    else:
+        kv = 2  # preserve GQA
+    kw = dict(
+        name=cfg.name + "-smoke",
+        num_groups=max(1, min(2, cfg.num_groups)),
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=kv,
+        head_dim=16,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab_size=256,
+        window=min(cfg.window, seq_len // 2) if cfg.window else None,
+        num_vision_tokens=8 if cfg.num_vision_tokens else 0,
+        mlstm_chunk=16,
+        dtype="float32",
+        param_dtype="float32",
+    )
+    if cfg.moe is not None:
+        kw["moe"] = dataclasses.replace(cfg.moe, num_experts=4, top_k=2,
+                                        d_ff_expert=64)
+    return dataclasses.replace(cfg, **kw)

@@ -1,0 +1,22 @@
+"""xLSTM-1.3B: 7:1 mLSTM:sLSTM block ratio (48 layers, 6 groups of 8).
+
+mLSTM blocks carry the matrix memory (chunkwise-parallel in training via the
+Pallas kernel); sLSTM blocks are inherently sequential scalar memories.
+O(1) decode state => runs the long_500k cell.  [arXiv:2405.04517; unverified]
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    block_pattern=("mlstm",) * 7 + ("slstm",),
+    num_groups=6,
+    d_model=2048,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    mlstm_proj_factor=2.0,
+    mlstm_chunk=128,
+    source="arXiv:2405.04517",
+))

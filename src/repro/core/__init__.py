@@ -1,0 +1,23 @@
+"""Core SMA library: the paper's contribution as composable pieces.
+
+* :mod:`repro.core.modes`     — the two execution modes and op taxonomy.
+* :mod:`repro.core.dataflow`  — analytical model of the three GEMM dataflows
+  (TensorCore dot-product, TPU weight-stationary, SMA semi-broadcast WS);
+  reproduces the paper's Figs. 1/7/8 evaluation.
+* :mod:`repro.core.sma`       — the SMA execution policy (mode planning +
+  fusion) and the ``sma_matmul`` LSMA-analogue runtime entry.
+* :mod:`repro.core.scheduler` — temporal multi-stream scheduling (Fig. 9).
+* :mod:`repro.core.roofline`  — 3-term roofline from compiled XLA artifacts.
+"""
+from repro.core.modes import ExecMode, Op, OpKind, classify_op, mode_histogram
+from repro.core.sma import SMAPolicy, sma_matmul
+
+__all__ = [
+    "ExecMode",
+    "Op",
+    "OpKind",
+    "classify_op",
+    "mode_histogram",
+    "SMAPolicy",
+    "sma_matmul",
+]

@@ -1,0 +1,180 @@
+"""The SMA execution policy: temporal mode planning and fusion.
+
+This is the paper's contribution as a *composable library feature*: given a
+layer's operator plan, decide which ops run in SYSTOLIC mode (MXU / systolic
+array) and which in SIMD mode (VPU / SIMD lanes), and group adjacent ops into
+*fusion groups* that execute as one kernel with the intermediate resident in
+VMEM — the TPU analogue of the paper's zero-cost in-situ mode switch.
+
+Every fusion group saves the HBM round-trip that a spatially-decoupled design
+(TensorCore semantics: matrix unit writes registers, separate kernel reads
+them back; or accelerator + host: PCIe) would pay between modes.  The planner
+reports those avoided round-trips so benchmarks can quantify the win.
+
+The runtime half, :func:`sma_matmul`, is the ``LSMA`` analogue: a single entry
+point that runs a GEMM in systolic mode with an optional fused SIMD epilogue,
+dispatching to the Pallas kernel on TPU (or in interpret mode) and to a pure
+jnp path under XLA elsewhere (the dry-run path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.modes import (FUSABLE_INTO_SYSTOLIC, ExecMode, Op, OpKind)
+
+
+@dataclasses.dataclass
+class FusionGroup:
+    """A maximal run of ops executed as one kernel (one mode 'residency')."""
+
+    ops: List[Op]
+
+    @property
+    def anchor(self) -> Optional[Op]:
+        """The systolic op the group is built around, if any."""
+        for op in self.ops:
+            if op.mode == ExecMode.SYSTOLIC:
+                return op
+        return None
+
+    @property
+    def mode(self) -> ExecMode:
+        return ExecMode.SYSTOLIC if self.anchor is not None else ExecMode.SIMD
+
+    @property
+    def fused_simd_ops(self) -> int:
+        return sum(1 for op in self.ops if op.mode == ExecMode.SIMD)
+
+    @property
+    def bytes_kept_in_vmem(self) -> float:
+        """HBM traffic avoided by keeping intermediates resident."""
+        if len(self.ops) <= 1:
+            return 0.0
+        # Each fused boundary avoids one write + one read of the intermediate.
+        return sum(2.0 * op.bytes_in for op in self.ops[1:])
+
+
+@dataclasses.dataclass
+class PlanSummary:
+    groups: int
+    mode_switches: int
+    fused_simd_ops: int
+    hbm_bytes_avoided: float
+    systolic_flop_share: float
+
+
+class SMAPolicy:
+    """Plans temporal mode assignment + fusion over a symbolic op sequence.
+
+    Greedy planning rule (mirrors the paper's SIMD-systolic collaboration):
+
+    * a SYSTOLIC op opens a new group (the GEMM anchor);
+    * subsequent SIMD ops that are tile-local and fusable attach to the open
+      group as epilogues, up to ``max_epilogue_ops``;
+    * non-fusable SIMD ops (cross-tile reductions, gathers, recurrences,
+      control flow) close the group and run in SIMD mode;
+    * consecutive SIMD ops coalesce into one SIMD group (XLA fuses these).
+    """
+
+    def __init__(self, *, fuse_epilogues: bool = True,
+                 max_epilogue_ops: int = 4) -> None:
+        self.fuse_epilogues = fuse_epilogues
+        self.max_epilogue_ops = max_epilogue_ops
+
+    def plan(self, ops: Sequence[Op]) -> List[FusionGroup]:
+        groups: List[FusionGroup] = []
+        open_group: Optional[FusionGroup] = None
+        epilogue_budget = 0
+        for op in ops:
+            if op.mode == ExecMode.SYSTOLIC:
+                open_group = FusionGroup([op])
+                groups.append(open_group)
+                epilogue_budget = self.max_epilogue_ops
+            elif (self.fuse_epilogues and open_group is not None
+                  and open_group.anchor is not None
+                  and op.kind in FUSABLE_INTO_SYSTOLIC
+                  and op.tile_local and epilogue_budget > 0):
+                open_group.ops.append(op)
+                epilogue_budget -= 1
+            else:
+                # Pure-SIMD group; coalesce with a preceding SIMD group.
+                if (groups and groups[-1].anchor is None):
+                    groups[-1].ops.append(op)
+                else:
+                    groups.append(FusionGroup([op]))
+                open_group = None
+        return groups
+
+    def summarize(self, ops: Sequence[Op]) -> PlanSummary:
+        groups = self.plan(ops)
+        switches = 0
+        prev: Optional[ExecMode] = None
+        for g in groups:
+            if prev is not None and g.mode != prev:
+                switches += 1
+            prev = g.mode
+        total_flops = sum(op.flops for op in ops) or 1.0
+        systolic = sum(op.flops for op in ops if op.mode == ExecMode.SYSTOLIC)
+        return PlanSummary(
+            groups=len(groups),
+            mode_switches=switches,
+            fused_simd_ops=sum(g.fused_simd_ops for g in groups
+                               if g.anchor is not None),
+            hbm_bytes_avoided=sum(g.bytes_kept_in_vmem for g in groups),
+            systolic_flop_share=systolic / total_flops,
+        )
+
+
+# --------------------------------------------------------------------------
+# Runtime: the LSMA analogue.
+# --------------------------------------------------------------------------
+#: Named epilogues an SMA GEMM can fuse (all VPU-friendly, tile-local).
+EPILOGUES: dict[str, Callable[[jax.Array], jax.Array]] = {
+    "none": lambda x: x,
+    "relu": jax.nn.relu,
+    "gelu": functools.partial(jax.nn.gelu, approximate=True),
+    "silu": jax.nn.silu,
+    "tanh": jnp.tanh,
+}
+
+
+def default_backend() -> str:
+    """'pallas' on TPU, 'xla' elsewhere (the dry-run / CPU path)."""
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def sma_matmul(a: jax.Array, b: jax.Array, *,
+               epilogue: str = "none",
+               bias: Optional[jax.Array] = None,
+               backend: Optional[str] = None,
+               interpret: bool = False,
+               accum_dtype: jnp.dtype = jnp.float32) -> jax.Array:
+    """``C = epilogue(A @ B + bias)`` in systolic mode with a fused epilogue.
+
+    The single-kernel fusion (GEMM + bias + activation) is the SMA temporal
+    integration: the SIMD-mode epilogue runs on the VPU while the C tile is
+    still resident in VMEM, exactly as the paper's SIMD lanes post-process the
+    systolic array's RF-resident output with zero reconfiguration cost.
+
+    ``backend='xla'`` lowers to ``jax.lax.dot_general`` + fused elementwise —
+    semantically identical, used for CPU dry-runs (XLA fuses the epilogue into
+    its own GEMM loop, so the accounting stays representative).
+    """
+    backend = backend or default_backend()
+    if backend == "pallas" or interpret:
+        from repro.kernels import ops as kernel_ops  # defer: optional dep cycle
+        return kernel_ops.sma_gemm(a, b, bias=bias, epilogue=epilogue,
+                                   interpret=interpret,
+                                   accum_dtype=accum_dtype)
+    out = jax.lax.dot_general(
+        a, b, (((a.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=accum_dtype)
+    if bias is not None:
+        out = out + bias.astype(out.dtype)
+    out = EPILOGUES[epilogue](out)
+    return out.astype(a.dtype)

@@ -1,0 +1,117 @@
+"""Deterministic synthetic data pipeline — sharded, resumable, checkpointable.
+
+Design constraints from the 1000-node bar:
+
+* **Stateless addressing**: batch ``i`` is a pure function of ``(seed, i)`` —
+  any host can produce any shard of any step without coordination, which is
+  what makes elastic restarts and straggler re-assignment trivial.
+* **Checkpointable cursor**: pipeline state is a single integer (next step);
+  it rides in every checkpoint.
+* **Learnable structure**: tokens follow a noisy affine bigram process over a
+  Zipf-ish unigram so cross-entropy has real headroom below ln(V) — training
+  curves in the examples demonstrably *learn* rather than memorize noise.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 1234
+    noise: float = 0.1          # fraction of uniformly random tokens
+    input_mode: str = "tokens"  # tokens | embeds | tokens+vision
+    d_model: int = 0            # for embeds modes
+    num_vision_tokens: int = 0
+
+
+def _bigram_params(seed: int, vocab: int) -> tuple[int, int]:
+    rng = np.random.RandomState(seed)
+    a = int(rng.randint(1, vocab - 1)) | 1  # odd => full-period-ish
+    c = int(rng.randint(0, vocab - 1))
+    return a, c
+
+
+def make_batch(cfg: DataConfig, step: int) -> Dict[str, np.ndarray]:
+    """Batch ``step`` as host numpy (tokens/labels [+ stub embeddings])."""
+    rng = np.random.RandomState((cfg.seed * 1_000_003 + step) % (2 ** 31))
+    b, s, v = cfg.global_batch, cfg.seq_len, cfg.vocab_size
+    a, c = _bigram_params(cfg.seed, v)
+
+    start = rng.zipf(1.3, size=(b, 1)).astype(np.int64) % v
+    toks = np.empty((b, s + 1), np.int64)
+    toks[:, :1] = start
+    noise_mask = rng.rand(b, s) < cfg.noise
+    noise_tok = rng.randint(0, v, size=(b, s))
+    for t in range(s):
+        nxt = (a * toks[:, t] + c) % v
+        toks[:, t + 1] = np.where(noise_mask[:, t], noise_tok[:, t], nxt)
+
+    batch: Dict[str, np.ndarray] = {}
+    tokens = toks[:, :-1].astype(np.int32)
+    labels = toks[:, 1:].astype(np.int32)
+    if cfg.input_mode == "embeds":
+        # Audio stub: frame embeddings derived deterministically from tokens
+        # (a fixed sinusoidal codebook), so the label structure is learnable.
+        phase = tokens[..., None].astype(np.float32)
+        batch["embeds"] = np.sin(
+            phase * (np.arange(cfg.d_model, dtype=np.float32) + 1.0)
+            * (2 * np.pi / cfg.vocab_size)).astype(np.float32)
+        batch["labels"] = labels
+    elif cfg.input_mode == "tokens+vision":
+        nv = cfg.num_vision_tokens
+        batch["tokens"] = tokens[:, : s - nv]
+        batch["vision_embeds"] = rng.randn(b, nv, cfg.d_model) \
+            .astype(np.float32) * 0.02
+        lab = labels.copy()
+        lab[:, :nv] = -1  # no loss on vision positions
+        batch["labels"] = lab
+    else:
+        batch["tokens"] = tokens
+        batch["labels"] = labels
+    return batch
+
+
+@dataclasses.dataclass
+class PipelineState:
+    next_step: int = 0
+
+    def to_dict(self) -> Dict[str, int]:
+        return {"next_step": self.next_step}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, int]) -> "PipelineState":
+        return cls(next_step=int(d["next_step"]))
+
+
+class DataPipeline:
+    """Iterator with explicit, checkpointable state and device placement."""
+
+    def __init__(self, cfg: DataConfig,
+                 sharding: Optional[jax.sharding.Sharding] = None,
+                 state: Optional[PipelineState] = None) -> None:
+        self.cfg = cfg
+        self.sharding = sharding
+        self.state = state or PipelineState()
+
+    def __iter__(self) -> Iterator[Dict[str, jax.Array]]:
+        return self
+
+    def __next__(self) -> Dict[str, jax.Array]:
+        batch = make_batch(self.cfg, self.state.next_step)
+        self.state.next_step += 1
+        if self.sharding is not None:
+            batch = {k: jax.device_put(v, self.sharding) if v.ndim == 2
+                     else jax.device_put(v) for k, v in batch.items()}
+        return {k: jnp.asarray(v) for k, v in batch.items()}
+
+    def peek_step(self) -> int:
+        return self.state.next_step

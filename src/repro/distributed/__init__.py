@@ -1,0 +1,7 @@
+"""Distribution layer: sharding rules, pipeline parallelism, collectives."""
+from repro.distributed.sharding import (MeshRules, logical_spec, rules_for,
+                                        shard, spec_tree_to_shardings,
+                                        use_rules)
+
+__all__ = ["MeshRules", "logical_spec", "rules_for", "shard",
+           "spec_tree_to_shardings", "use_rules"]

@@ -1,0 +1,196 @@
+"""Logical-axis sharding rules (MaxText-style) for the production meshes.
+
+Every parameter and major activation in the model is annotated with *logical*
+axis names; a :class:`MeshRules` table maps those to physical mesh axes.  The
+same model code then runs on the single-pod ``("data", "model")`` mesh, the
+multi-pod ``("pod", "data", "model")`` mesh, a single CPU device (all rules
+resolve to None), or any future topology — only the rule table changes.
+
+Default placement:
+
+==============  =====================  ====================================
+logical axis    physical axes          role
+==============  =====================  ====================================
+batch           ("pod", "data")        data parallelism (hierarchical)
+vocab           "model"                TP: embedding/logits shards
+heads/kv_heads  "model"                TP: attention head shards
+mlp             "model"                TP: FFN hidden shards
+expert          "model"                EP: MoE expert shards
+embed           "data"                 FSDP: parameter/optimizer storage
+                                       (gathered per layer inside the scan)
+seq             None | "model"         sequence parallelism (perf lever)
+kv_seq          None | "data"          context parallelism for long decode
+layers          None                   scan axis of stacked layer params
+==============  =====================  ====================================
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    """Mapping from logical axis names to physical mesh axes."""
+
+    batch: AxisVal = ("pod", "data")
+    vocab: AxisVal = "model"
+    heads: AxisVal = "model"
+    kv_heads: AxisVal = "model"
+    mlp: AxisVal = "model"
+    expert: AxisVal = "model"
+    embed: AxisVal = "data"       # FSDP storage axis for params
+    embed_act: AxisVal = None     # activations' feature axis
+    seq: AxisVal = None           # sequence inside mixers: always unsharded
+    seq_res: AxisVal = None       # residual-stream sequence: "model" under
+                                  # Megatron-SP (gather at mixer entry,
+                                  # scatter at block exit)
+    kv_seq: AxisVal = None        # "data" under decode context parallelism
+    layers: AxisVal = None
+    expert_group: AxisVal = None
+    head_dim: AxisVal = None
+    stats: AxisVal = None
+
+    def resolve(self, logical: Optional[str],
+                mesh_axes: Sequence[str]) -> AxisVal:
+        """Logical name -> physical axes, dropping axes absent in the mesh."""
+        if logical is None:
+            return None
+        val = getattr(self, logical)
+        if val is None:
+            return None
+        if isinstance(val, str):
+            return val if val in mesh_axes else None
+        kept = tuple(a for a in val if a in mesh_axes)
+        return kept if kept else None
+
+    def spec(self, *logical_axes: Optional[str],
+             mesh_axes: Sequence[str]) -> P:
+        return P(*(self.resolve(ax, mesh_axes) for ax in logical_axes))
+
+
+# ---------------------------------------------------------------------------
+# Ambient rule context: models call ``shard(x, "batch", "seq", "embed_act")``
+# and the launcher decides the physical meaning (or no-op on 1 device).
+# ---------------------------------------------------------------------------
+class _Ctx(threading.local):
+    def __init__(self) -> None:
+        self.rules: Optional[MeshRules] = None
+        self.mesh_axes: Tuple[str, ...] = ()
+
+
+_CTX = _Ctx()
+
+
+class use_rules:
+    """Context manager installing the (rules, mesh-axes) pair for a trace."""
+
+    def __init__(self, rules: Optional[MeshRules],
+                 mesh_axes: Sequence[str]) -> None:
+        self._new = (rules, tuple(mesh_axes))
+        self._old: Tuple[Optional[MeshRules], Tuple[str, ...]] = (None, ())
+
+    def __enter__(self) -> "use_rules":
+        self._old = (_CTX.rules, _CTX.mesh_axes)
+        _CTX.rules, _CTX.mesh_axes = self._new
+        return self
+
+    def __exit__(self, *exc) -> None:
+        _CTX.rules, _CTX.mesh_axes = self._old
+
+
+def current_rules() -> Optional[MeshRules]:
+    return _CTX.rules
+
+
+def logical_spec(*logical_axes: Optional[str]) -> Optional[P]:
+    """Resolve logical axes under the ambient rules (None if no rules set)."""
+    if _CTX.rules is None:
+        return None
+    return _CTX.rules.spec(*logical_axes, mesh_axes=_CTX.mesh_axes)
+
+
+def shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """``with_sharding_constraint`` by logical axes; no-op without rules."""
+    spec = logical_spec(*logical_axes)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def spec_tree_to_shardings(mesh: jax.sharding.Mesh, specs):
+    """Map a pytree of PartitionSpecs to NamedShardings on ``mesh``."""
+    return jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s),
+        specs, is_leaf=lambda s: isinstance(s, P))
+
+
+def rules_for(cfg, mesh: jax.sharding.Mesh, *,
+              batch_size: Optional[int] = None,
+              kind: str = "train",
+              sequence_parallel: bool = False) -> MeshRules:
+    """Divisibility-aware rules for one (architecture, shape-kind, mesh).
+
+    * Head counts that do not divide the "model" axis (deepseek's 56 query
+      heads, GQA kv=8, recurrentgemma's 10 heads on a 16-wide TP axis) fall
+      back to replication for the *activation* head axis — the flattened
+      weight columns (H*hd) still shard over "model".  When both head axes
+      are replicated, ``head_dim`` picks up the TP axis instead (train), or
+      the KV-cache sequence does (decode context parallelism) — never both,
+      a PartitionSpec may not reuse a mesh axis.
+    * Batches smaller than the DP degree drop the batch rule (long_500k's
+      batch=1).
+    """
+    sizes = dict(mesh.shape)  # works for Mesh and AbstractMesh alike
+    model = sizes.get("model", 1)
+
+    def fit_model(n: int) -> AxisVal:
+        return "model" if n % model == 0 else None
+
+    n_heads = getattr(cfg, "num_heads", 1)
+    n_kv = getattr(cfg, "num_kv_heads", 1)
+    hd = getattr(cfg, "head_dim", None) or (
+        getattr(cfg, "d_model", 0) // max(n_heads, 1))
+
+    heads_r = fit_model(n_heads)
+    kv_r = fit_model(n_kv)
+    head_dim_r: AxisVal = None
+    kv_seq_r: AxisVal = None
+    if kind == "decode" and kv_r is None:
+        # Context parallelism: the big tensor is the KV cache — shard its
+        # sequence dim over the otherwise-idle TP axis.
+        kv_seq_r = "model"
+    elif heads_r is None and kv_r is None and hd and hd % model == 0:
+        head_dim_r = "model"
+
+    batch_axes: AxisVal = ("pod", "data")
+    if batch_size is not None:
+        kept = []
+        width = 1
+        for ax in ("pod", "data"):
+            if ax in sizes and batch_size % (width * sizes[ax]) == 0:
+                kept.append(ax)
+                width *= sizes[ax]
+        batch_axes = tuple(kept) if kept else None
+
+    d_model = getattr(cfg, "d_model", 1)
+    data = sizes.get("data", 1)
+    return MeshRules(
+        batch=batch_axes,
+        vocab="model",
+        heads=heads_r,
+        kv_heads=kv_r,
+        mlp="model",
+        expert="model",
+        embed="data" if d_model % data == 0 else None,
+        seq=None,
+        seq_res="model" if sequence_parallel else None,
+        kv_seq=kv_seq_r,
+        head_dim=head_dim_r,
+    )

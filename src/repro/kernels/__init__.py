@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel lives in ``<name>.py`` (``pl.pallas_call`` + explicit BlockSpec
+VMEM tiling), has a jit'd public wrapper in :mod:`repro.kernels.ops` (with
+pallas / interpret / xla backend dispatch) and a pure-jnp oracle in
+:mod:`repro.kernels.ref`.
+"""
+from repro.kernels.ops import (decode_attention, flash_attention,
+                               mlstm_chunkwise, rglru_scan, rmsnorm_gemm,
+                               sma_gemm)
+
+__all__ = [
+    "sma_gemm",
+    "rmsnorm_gemm",
+    "flash_attention",
+    "decode_attention",
+    "rglru_scan",
+    "mlstm_chunkwise",
+]

@@ -1,0 +1,145 @@
+"""SMA GEMM: the paper's semi-broadcast weight-stationary dataflow on the MXU.
+
+TPU adaptation of Sec. III-B / IV-C.  The mapping of the paper's structures:
+
+=====================================  =====================================
+paper (GPU substrate)                   this kernel (TPU substrate)
+=====================================  =====================================
+128x128 ``C_sub`` in the register file  (bm, bn) C accumulator in VMEM scratch
+                                        — the *revolving accumulator*: stays
+                                        resident across the whole K loop
+B subtile stationary in PE buffers      (bk, bn) B block pinned in VMEM for
+                                        the MXU pass (weight-stationary)
+A element broadcast down a column       the MXU's internal operand broadcast
+                                        across the systolic rows — the reason
+                                        this dataflow is *native* here
+LSMA asynchronous K x 8 x 8 macro-op    one grid step along the K ("arbitrary")
+                                        dimension: flexible K, async w.r.t.
+                                        the next block's DMA
+double-buffered warp sets               Pallas's implicit two-stage pipeline:
+                                        block k+1 DMAs HBM->VMEM while block k
+                                        runs on the MXU
+SIMD epilogue after sync                fused VPU epilogue (bias + activation)
+                                        applied while C is still in VMEM —
+                                        the temporal mode switch with zero
+                                        HBM round-trip
+=====================================  =====================================
+
+Block shapes default to (256, 256, 512) — multiples of the 128x128 MXU tile
+and the (8,128) VPU lane grid, sized so A+B+C blocks (~0.8 MB at bf16) fit
+VMEM (~16 MB) with headroom for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.sma import EPILOGUES
+
+
+def _sma_gemm_kernel(a_ref, b_ref, bias_ref, o_ref, acc_ref, *,
+                     epilogue: str, n_k: int, out_dtype):
+    """One (i, j, k) grid step: C_block += A_block @ B_block (+ epilogue)."""
+    k_idx = pl.program_id(2)
+
+    # -- systolic phase -----------------------------------------------------
+    # Revolving accumulator: zero it on the first K step only (the C block
+    # never leaves VMEM between K steps — the paper's RF-resident C_sub).
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Weight-stationary MXU pass: B block pinned, A streamed through.
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=acc_ref.dtype)
+
+    # -- SIMD (epilogue) phase ----------------------------------------------
+    # Temporal mode switch: on the last K step the VPU post-processes the
+    # accumulator in place and the result is written once to HBM.
+    @pl.when(k_idx == n_k - 1)
+    def _epilogue():
+        out = acc_ref[...]
+        if bias_ref is not None:
+            out = out + bias_ref[...].astype(out.dtype)
+        out = EPILOGUES[epilogue](out)
+        o_ref[...] = out.astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("epilogue", "block_m", "block_n", "block_k",
+                     "interpret", "accum_dtype"))
+def sma_gemm(a: jax.Array, b: jax.Array, *,
+             bias: Optional[jax.Array] = None,
+             epilogue: str = "none",
+             block_m: int = 256, block_n: int = 256, block_k: int = 512,
+             interpret: bool = False,
+             accum_dtype: jnp.dtype = jnp.float32) -> jax.Array:
+    """``C = epilogue(A @ B + bias)`` via the SMA dataflow Pallas kernel.
+
+    a: (..., M, K); b: (K, N); bias: (N,) or None.  Leading dims of ``a`` are
+    collapsed into M (the paper's thread-block grid over the output).
+    """
+    orig_shape = a.shape
+    m_total = 1
+    for d in orig_shape[:-1]:
+        m_total *= d
+    k_dim = orig_shape[-1]
+    a2 = a.reshape(m_total, k_dim)
+    n_dim = b.shape[1]
+    if b.shape[0] != k_dim:
+        raise ValueError(f"A/B contraction mismatch: {a.shape} @ {b.shape}")
+
+    bm = min(block_m, m_total)
+    bn = min(block_n, n_dim)
+    bk = min(block_k, k_dim)
+    if m_total % bm or n_dim % bn or k_dim % bk:
+        # Fall back to padded grid via ceil-div; pad A/B (cheap, traced once).
+        pad_m = (-m_total) % bm
+        pad_k = (-k_dim) % bk
+        pad_n = (-n_dim) % bn
+        a2 = jnp.pad(a2, ((0, pad_m), (0, pad_k)))
+        b = jnp.pad(b, ((0, pad_k), (0, pad_n)))
+        if bias is not None:
+            bias = jnp.pad(bias, (0, pad_n))
+    mm, kk = a2.shape
+    nn = b.shape[1]
+    grid = (mm // bm, nn // bn, kk // bk)
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),   # A: streams along K
+        pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),   # B: stationary per k
+    ]
+    inputs = [a2, b]
+    if bias is not None:
+        # (1, N) layout: TPU vector lanes want >=2D blocks.
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, k: (0, j)))
+        inputs.append(bias.reshape(1, -1))
+        kernel = functools.partial(_sma_gemm_kernel, epilogue=epilogue,
+                                   n_k=grid[2], out_dtype=a.dtype)
+    else:
+        def kernel(a_ref, b_ref, o_ref, acc_ref):
+            _sma_gemm_kernel(a_ref, b_ref, None, o_ref, acc_ref,
+                             epilogue=epilogue, n_k=grid[2],
+                             out_dtype=a.dtype)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mm, nn), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), accum_dtype)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(*inputs)
+
+    out = out[:m_total, :n_dim]
+    return out.reshape(*orig_shape[:-1], n_dim)

@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (device counts lock on first backend initialization).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """The target deployment mesh.
+
+    single-pod:  (16, 16)    = ("data", "model")         — 256 chips
+    multi-pod:   (2, 16, 16) = ("pod", "data", "model")  — 512 chips
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def smoke_mesh() -> jax.sharding.Mesh:
+    """Whatever devices exist, as a 1D 'data' mesh (CPU tests)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

@@ -1,0 +1,4 @@
+"""Model substrate: layers, attention, MoE, recurrent blocks, unified LM."""
+from repro.models.layers import Runtime
+
+__all__ = ["Runtime"]

@@ -1,0 +1,162 @@
+"""Functional layer library (no flax — explicit param/spec trees).
+
+Conventions:
+
+* every ``*_init`` returns ``(params, specs)`` — two pytrees of identical
+  structure; ``specs`` leaves are tuples of *logical* axis names consumed by
+  :mod:`repro.distributed.sharding`.
+* every ``*_apply`` is a pure function of ``(params, inputs, ...)``.
+* activations are computed in ``cfg.activation_dtype`` (bf16 on TPU), params
+  stored in ``cfg.parameter_dtype`` (f32 master copies).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+
+
+@dataclasses.dataclass(frozen=True)
+class Runtime:
+    """Execution-environment knobs threaded through model code."""
+
+    backend: Optional[str] = None   # kernels.ops backend: None=auto
+    interpret: bool = False         # Pallas interpret mode (tests)
+    attention_chunk: int = 1024     # XLA-path online-softmax chunk
+    remat: bool = True              # checkpoint each block group
+    # remat policy: "full" recomputes everything; "dots" saves matmul
+    # outputs (jax.checkpoint_policies.checkpoint_dots) so the backward pass
+    # neither recomputes the projections nor repeats their TP all-reduces.
+    remat_policy: str = "full"
+    sequence_parallel: bool = False # Megatron-SP activation sharding
+    # Unroll inner lax.scans (layer groups, attention KV chunks, mLSTM
+    # chunks).  Used by the dry-run's L=1/L=2 probe compiles: XLA's
+    # cost_analysis counts a while-loop body ONCE, so roofline FLOP/byte
+    # totals are extrapolated from small unrolled probes (see dryrun.py).
+    scan_unroll: bool = False
+
+
+def compute_cast(w: jax.Array, dtype, *logical_axes: str) -> jax.Array:
+    """Cast a stored (f32, FSDP-sharded) parameter to the compute dtype
+    *before* GSPMD inserts the per-layer all-gather, halving its bytes.
+
+    The sharding constraint pins the converted copy to the storage layout so
+    the convert runs shard-local; the consuming einsum then gathers bf16.
+    (EXPERIMENTS §Perf: measured 2x on parameter all-gather bytes.)"""
+    from repro.distributed.sharding import shard as _shard
+    return _shard(w.astype(dtype), *logical_axes)
+
+
+def variance_scaling_init(key: jax.Array, shape: Tuple[int, ...],
+                          dtype, fan_in: Optional[int] = None) -> jax.Array:
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def dense_init(key: jax.Array, in_dim: int, out_dim: int,
+               axes: Tuple[str, str], dtype) -> Tuple[dict, dict]:
+    w = variance_scaling_init(key, (in_dim, out_dim), dtype)
+    return {"w": w}, {"w": axes}
+
+
+def dense_apply(params: dict, x: jax.Array, *,
+                out_logical: Tuple[Optional[str], ...] = ()) -> jax.Array:
+    w = params["w"].astype(x.dtype)
+    y = jnp.einsum("...d,df->...f", x, w)
+    if out_logical:
+        y = shard(y, *out_logical)
+    return y
+
+
+def rmsnorm_init(d: int, dtype) -> Tuple[dict, dict]:
+    return {"scale": jnp.ones((d,), dtype)}, {"scale": (None,)}
+
+
+def rmsnorm_apply(params: dict, x: jax.Array, *, eps: float = 1e-6
+                  ) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int, dtype
+               ) -> Tuple[dict, dict]:
+    table = (jax.random.normal(key, (vocab, d), jnp.float32)).astype(dtype)
+    return {"table": table}, {"table": ("vocab", "embed")}
+
+
+def embed_apply(params: dict, tokens: jax.Array, dtype) -> jax.Array:
+    return params["table"].astype(dtype)[tokens]
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings
+# --------------------------------------------------------------------------
+def apply_rope(x: jax.Array, positions: jax.Array, *,
+               theta: float = 10000.0) -> jax.Array:
+    """x: (..., S, H, hd) or (..., H, hd) single-step; positions broadcastable
+    to the S axis (ints)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return rot.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Vocab-sharded cross entropy (one-hot-free; reductions over the sharded
+# vocab axis become partial-reduce + all-reduce under GSPMD).
+# --------------------------------------------------------------------------
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  *, softcap: Optional[float] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Mean CE loss + accuracy.  logits (B,S,V) [sharded B/data, V/model]."""
+    logits32 = logits.astype(jnp.float32)
+    if softcap:
+        logits32 = jnp.tanh(logits32 / softcap) * softcap
+    m = jax.lax.stop_gradient(jnp.max(logits32, axis=-1, keepdims=True))
+    shifted = logits32 - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    label_logit = jnp.sum(
+        jnp.where(vocab_iota == labels[..., None], logits32, 0.0), axis=-1)
+    loss = jnp.mean(lse - label_logit)
+    acc = jnp.mean((jnp.argmax(logits32, -1) == labels).astype(jnp.float32))
+    return loss, acc
+
+
+def gated_mlp_init(key: jax.Array, d: int, d_ff: int, dtype
+                   ) -> Tuple[dict, dict]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "wi": variance_scaling_init(k1, (d, d_ff), dtype),
+        "wg": variance_scaling_init(k2, (d, d_ff), dtype),
+        "wo": variance_scaling_init(k3, (d_ff, d), dtype),
+    }
+    specs = {"wi": ("embed", "mlp"), "wg": ("embed", "mlp"),
+             "wo": ("mlp", "embed")}
+    return params, specs
+
+
+def gated_mlp_apply(params: dict, x: jax.Array) -> jax.Array:
+    """SwiGLU MLP.  Under the SMA policy this is two systolic passes with the
+    silu/gating SIMD phase fused between them (epilogue fusion on TPU)."""
+    wi = compute_cast(params["wi"], x.dtype, "embed", "mlp")
+    wg = compute_cast(params["wg"], x.dtype, "embed", "mlp")
+    wo = compute_cast(params["wo"], x.dtype, "mlp", "embed")
+    h = jnp.einsum("...d,df->...f", x, wi)
+    g = jnp.einsum("...d,df->...f", x, wg)
+    h = shard(jax.nn.silu(g) * h, "batch", "seq", "mlp")
+    return jnp.einsum("...f,fd->...d", h, wo)

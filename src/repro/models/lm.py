@@ -1,0 +1,422 @@
+"""Unified decoder LM covering all ten assigned architectures.
+
+A config's ``block_pattern`` (repeated ``num_groups`` times) selects the
+temporal-mixing block per layer: full/local attention (+ MLP or MoE), Griffin
+RG-LRU, xLSTM mLSTM/sLSTM.  Parameters for the repeated groups are *stacked*
+along a leading axis and the groups run under ``jax.lax.scan`` — essential to
+keep XLA compile time bounded at 95-layer scale — with per-group remat.
+
+Inputs: tokens (LM), precomputed frame embeddings (audio stub), or tokens +
+vision-patch embeddings (VLM stub) per ``cfg.input_mode``.
+
+The serving half maintains a state pytree (KV caches / recurrent states,
+stacked over groups like the params) with ``prefill`` and ``decode_step``
+entry points — ``decode_step`` is what the decode-shape dry-run cells lower.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.kernels import ops as kops
+from repro.models import attention, moe as moe_lib, recurrent
+from repro.models.layers import (Runtime, compute_cast, cross_entropy,
+                                 embed_init, gated_mlp_apply, gated_mlp_init,
+                                 rmsnorm_apply, rmsnorm_init,
+                                 variance_scaling_init)
+
+VOCAB_PAD = 256
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    return -(-cfg.vocab_size // VOCAB_PAD) * VOCAB_PAD
+
+
+# ===========================================================================
+# Init
+# ===========================================================================
+def _block_init(key: jax.Array, btype: str, cfg: ModelConfig
+                ) -> Tuple[dict, dict]:
+    """One block (norms + mixer [+ MLP/MoE]) of one group."""
+    d = cfg.d_model
+    dt = cfg.parameter_dtype
+    k1, k2, k3 = jax.random.split(key, 3)
+    params: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    if btype in ("attn", "local"):
+        params["norm1"], specs["norm1"] = rmsnorm_init(d, dt)
+        params["mixer"], specs["mixer"] = attention.attn_init(k1, cfg)
+        params["norm2"], specs["norm2"] = rmsnorm_init(d, dt)
+        if cfg.moe is not None:
+            params["ffn"], specs["ffn"] = moe_lib.moe_init(k2, cfg)
+        else:
+            params["ffn"], specs["ffn"] = gated_mlp_init(k2, d, cfg.d_ff, dt)
+    elif btype == "rglru":
+        params["norm1"], specs["norm1"] = rmsnorm_init(d, dt)
+        params["mixer"], specs["mixer"] = recurrent.rglru_block_init(k1, cfg)
+        params["norm2"], specs["norm2"] = rmsnorm_init(d, dt)
+        params["ffn"], specs["ffn"] = gated_mlp_init(k2, d, cfg.d_ff, dt)
+    elif btype == "mlstm":
+        params["norm1"], specs["norm1"] = rmsnorm_init(d, dt)
+        params["mixer"], specs["mixer"] = recurrent.mlstm_block_init(k1, cfg)
+    elif btype == "slstm":
+        params["norm1"], specs["norm1"] = rmsnorm_init(d, dt)
+        params["mixer"], specs["mixer"] = recurrent.slstm_block_init(k1, cfg)
+    else:
+        raise ValueError(f"unknown block type {btype}")
+    return params, specs
+
+
+def init(key: jax.Array, cfg: ModelConfig) -> Tuple[dict, dict]:
+    """Full model params + logical-axis specs (stacked group blocks)."""
+    keys = jax.random.split(key, 4 + len(cfg.block_pattern))
+    params: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    vpad = padded_vocab(cfg)
+
+    if cfg.input_mode in ("tokens", "tokens+vision"):
+        params["embed"], specs["embed"] = embed_init(
+            keys[0], vpad, cfg.d_model, cfg.parameter_dtype)
+
+    blocks_p, blocks_s = [], []
+    for p, btype in enumerate(cfg.block_pattern):
+        gkeys = jax.random.split(keys[1 + p], cfg.num_groups)
+        stacked = jax.vmap(
+            lambda k, bt=btype: _block_init(k, bt, cfg)[0])(gkeys)
+        _, spec1 = _block_init(jax.random.PRNGKey(0), btype, cfg)
+        spec1 = jax.tree.map(lambda s: ("layers",) + tuple(s), spec1,
+                             is_leaf=lambda s: isinstance(s, tuple))
+        blocks_p.append(stacked)
+        blocks_s.append(spec1)
+    params["blocks"] = tuple(blocks_p)
+    specs["blocks"] = tuple(blocks_s)
+
+    params["final_norm"], specs["final_norm"] = rmsnorm_init(
+        cfg.d_model, cfg.parameter_dtype)
+    params["head"] = {"w": variance_scaling_init(
+        keys[-1], (cfg.d_model, vpad), cfg.parameter_dtype)}
+    specs["head"] = {"w": ("embed", "vocab")}
+    return params, specs
+
+
+# ===========================================================================
+# Forward (train / eval)
+# ===========================================================================
+def _embed_inputs(params: dict, cfg: ModelConfig, batch: Dict[str, jax.Array]
+                  ) -> jax.Array:
+    dtype = cfg.activation_dtype
+    if cfg.input_mode == "embeds":
+        x = batch["embeds"].astype(dtype)
+    elif cfg.input_mode == "tokens+vision":
+        tok = params["embed"]["table"].astype(dtype)[batch["tokens"]]
+        x = jnp.concatenate([batch["vision_embeds"].astype(dtype), tok],
+                            axis=1)
+    else:
+        x = params["embed"]["table"].astype(dtype)[batch["tokens"]]
+    return shard(x, "batch", "seq_res", "embed_act")
+
+
+def _mixer_in(bparams_norm, x: jax.Array) -> jax.Array:
+    """Norm on the (possibly seq-sharded) residual, then ONE explicit gather.
+
+    Megatron-SP discipline: the residual stream lives seq-sharded between
+    blocks; the all-gather to full sequence happens exactly once per mixer,
+    right after the norm — constraining here stops GSPMD from gathering
+    separately for each of the q/k/v/MLP consumers (EXPERIMENTS §Perf B3).
+    """
+    h = rmsnorm_apply(bparams_norm, x)
+    return shard(h, "batch", "seq", "embed_act")
+
+
+def _apply_block(bparams: dict, btype: str, x: jax.Array, cfg: ModelConfig,
+                 rt: Runtime, aux: Dict[str, jax.Array]
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    h = _mixer_in(bparams["norm1"], x)
+    if btype in ("attn", "local"):
+        window = cfg.window if btype == "local" else None
+        x = x + attention.attn_apply(bparams["mixer"], h, cfg, rt,
+                                     window=window)
+        h2 = _mixer_in(bparams["norm2"], x)
+        if cfg.moe is not None:
+            y, moe_aux = moe_lib.moe_apply(bparams["ffn"], h2, cfg)
+            aux = {k: aux.get(k, 0.0) + v for k, v in moe_aux.items()}
+        else:
+            y = gated_mlp_apply(bparams["ffn"], h2)
+        x = x + y
+    elif btype == "rglru":
+        x = x + recurrent.rglru_block_apply(bparams["mixer"], h, cfg, rt)
+        h2 = _mixer_in(bparams["norm2"], x)
+        x = x + gated_mlp_apply(bparams["ffn"], h2)
+    elif btype == "mlstm":
+        x = x + recurrent.mlstm_block_apply(bparams["mixer"], h, cfg, rt)
+    elif btype == "slstm":
+        x = x + recurrent.slstm_block_apply(bparams["mixer"], h, cfg, rt)
+    return shard(x, "batch", "seq_res", "embed_act"), aux
+
+
+def forward(params: dict, cfg: ModelConfig, rt: Runtime,
+            batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict]:
+    """Returns (logits (B,S,Vpad), aux)."""
+    x = _embed_inputs(params, cfg, batch)
+    aux_init = {"moe_lb_loss": jnp.zeros((), jnp.float32),
+                "moe_z_loss": jnp.zeros((), jnp.float32),
+                "moe_drop_frac": jnp.zeros((), jnp.float32)} \
+        if cfg.moe is not None else {}
+
+    def group_body(carry, gparams):
+        x, aux = carry
+        for p, btype in enumerate(cfg.block_pattern):
+            x, aux = _apply_block(gparams[p], btype, x, cfg, rt, aux)
+        return (x, aux), None
+
+    if rt.remat:
+        policy = (jax.checkpoint_policies.checkpoint_dots
+                  if rt.remat_policy == "dots" else None)
+        body = jax.checkpoint(group_body, policy=policy)
+    else:
+        body = group_body
+    (x, aux), _ = jax.lax.scan(body, (x, aux_init), params["blocks"],
+                               unroll=rt.scan_unroll)
+
+    x = rmsnorm_apply(params["final_norm"], x)
+    logits = jnp.einsum("...d,dv->...v", x,
+                        compute_cast(params["head"]["w"], x.dtype,
+                                     "embed", "vocab"))
+    logits = shard(logits, "batch", "seq", "vocab")
+    # never let padded-vocab columns win: mask them out
+    vpad = logits.shape[-1]
+    if vpad != cfg.vocab_size:
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                       logits.ndim - 1)
+        logits = jnp.where(col < cfg.vocab_size, logits, -1e30)
+    if cfg.moe is not None:
+        n_moe = sum(1 for b in cfg.block_pattern if b in ("attn", "local"))
+        denom = float(cfg.num_groups * n_moe)
+        aux = {k: v / denom for k, v in aux.items()}
+    return logits, aux
+
+
+def loss_fn(params: dict, cfg: ModelConfig, rt: Runtime,
+            batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token CE (+ MoE aux losses).  labels -1 positions are ignored."""
+    logits, aux = forward(params, cfg, rt, batch)
+    labels = batch["labels"]
+    valid = labels >= 0
+    safe_labels = jnp.where(valid, labels, 0)
+    logits32 = logits.astype(jnp.float32)
+    if cfg.logits_softcap:
+        logits32 = jnp.tanh(logits32 / cfg.logits_softcap) * cfg.logits_softcap
+    m = jax.lax.stop_gradient(jnp.max(logits32, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(logits32 - m), axis=-1)) + m[..., 0]
+    col = jax.lax.broadcasted_iota(jnp.int32, logits32.shape,
+                                   logits32.ndim - 1)
+    label_logit = jnp.sum(
+        jnp.where(col == safe_labels[..., None], logits32, 0.0), axis=-1)
+    ce = jnp.where(valid, lse - label_logit, 0.0)
+    denom = jnp.maximum(jnp.sum(valid.astype(jnp.float32)), 1.0)
+    loss = jnp.sum(ce) / denom
+    metrics = {"ce_loss": loss, **aux}
+    total = loss
+    if cfg.moe is not None:
+        total = total + aux["moe_lb_loss"] + aux["moe_z_loss"]
+    metrics["loss"] = total
+    acc = jnp.sum(jnp.where(valid, (jnp.argmax(logits32, -1) == safe_labels),
+                            False).astype(jnp.float32)) / denom
+    metrics["accuracy"] = acc
+    return total, metrics
+
+
+# ===========================================================================
+# Serving: cache init, prefill, decode
+# ===========================================================================
+def init_state(cfg: ModelConfig, batch: int, cache_size: int,
+               dtype=None) -> Tuple[Any, ...]:
+    """Decode-state pytree: one stacked entry per pattern position."""
+    dtype = dtype or cfg.activation_dtype
+    hd = cfg.resolved_head_dim
+    state = []
+    for btype in cfg.block_pattern:
+        if btype in ("attn", "local"):
+            size = min(cfg.window, cache_size) if btype == "local" \
+                else cache_size
+            entry = {
+                "k": jnp.zeros((cfg.num_groups, batch, cfg.num_kv_heads,
+                                size, hd), dtype),
+                "v": jnp.zeros((cfg.num_groups, batch, cfg.num_kv_heads,
+                                size, hd), dtype),
+            }
+        elif btype == "rglru":
+            entry = jax.tree.map(
+                lambda z: jnp.broadcast_to(
+                    z, (cfg.num_groups,) + z.shape),
+                recurrent.rglru_block_init_state(cfg, batch, dtype))
+        elif btype == "mlstm":
+            entry = jax.tree.map(
+                lambda z: jnp.broadcast_to(z, (cfg.num_groups,) + z.shape),
+                recurrent.mlstm_block_init_state(cfg, batch, dtype))
+        elif btype == "slstm":
+            entry = jax.tree.map(
+                lambda z: jnp.broadcast_to(z, (cfg.num_groups,) + z.shape),
+                recurrent.slstm_block_init_state(cfg, batch, dtype))
+        state.append(entry)
+    return tuple(state)
+
+
+def state_specs(cfg: ModelConfig) -> Tuple[Any, ...]:
+    """Logical-axis specs matching init_state's structure."""
+    specs = []
+    for btype in cfg.block_pattern:
+        if btype in ("attn", "local"):
+            kv = ("layers", "batch", "kv_heads", "kv_seq", "head_dim")
+            specs.append({"k": kv, "v": kv})
+        elif btype == "rglru":
+            specs.append({"h": ("layers", "batch", "mlp"),
+                          "conv_tail": ("layers", "batch", None, "mlp")})
+        elif btype == "mlstm":
+            specs.append({"c": ("layers", "batch", None, None, None),
+                          "n": ("layers", "batch", None, None),
+                          "m": ("layers", "batch", None),
+                          "conv_tail": ("layers", "batch", None, "mlp")})
+        elif btype == "slstm":
+            z = ("layers", "batch", None, None)
+            specs.append({"c": z, "n": z, "m": z, "h": z})
+    return tuple(specs)
+
+
+def _decode_block(bparams: dict, btype: str, x: jax.Array, bstate: dict,
+                  cache_len: jax.Array, cfg: ModelConfig, rt: Runtime
+                  ) -> Tuple[jax.Array, dict]:
+    h = rmsnorm_apply(bparams["norm1"], x)
+    if btype in ("attn", "local"):
+        window = cfg.window if btype == "local" else None
+        y, new_cache = attention.attn_decode(
+            bparams["mixer"], h, bstate, cache_len, cfg, rt, window=window)
+        x = x + y
+        h2 = rmsnorm_apply(bparams["norm2"], x)
+        if cfg.moe is not None:
+            y2, _ = moe_lib.moe_apply(bparams["ffn"], h2, cfg)
+        else:
+            y2 = gated_mlp_apply(bparams["ffn"], h2)
+        return x + y2, new_cache
+    if btype == "rglru":
+        y, new_state = recurrent.rglru_block_decode(
+            bparams["mixer"], h, bstate, cfg, rt)
+        x = x + y
+        h2 = rmsnorm_apply(bparams["norm2"], x)
+        return x + gated_mlp_apply(bparams["ffn"], h2), new_state
+    if btype == "mlstm":
+        y, new_state = recurrent.mlstm_block_decode(
+            bparams["mixer"], h, bstate, cfg, rt)
+        return x + y, new_state
+    if btype == "slstm":
+        y, new_state = recurrent.slstm_block_decode(
+            bparams["mixer"], h, bstate, cfg, rt)
+        return x + y, new_state
+    raise ValueError(btype)
+
+
+def decode_step(params: dict, state: Tuple[Any, ...], cache_len: jax.Array,
+                cfg: ModelConfig, rt: Runtime, batch: Dict[str, jax.Array]
+                ) -> Tuple[jax.Array, Tuple[Any, ...], jax.Array]:
+    """One token for every sequence.  Returns (logits, new_state, new_len)."""
+    if cfg.input_mode == "embeds":
+        x = batch["embeds"].astype(cfg.activation_dtype)  # (B,1,D)
+    else:
+        x = params["embed"]["table"].astype(cfg.activation_dtype)[
+            batch["tokens"]]
+    x = shard(x, "batch", None, "embed_act")
+
+    def group_body(x, xs):
+        gparams, gstate = xs
+        new_gstate = []
+        for p, btype in enumerate(cfg.block_pattern):
+            x, ns = _decode_block(gparams[p], btype, x, gstate[p],
+                                  cache_len, cfg, rt)
+            new_gstate.append(ns)
+        return x, tuple(new_gstate)
+
+    x, new_state = jax.lax.scan(group_body, x, (params["blocks"], state),
+                                unroll=rt.scan_unroll)
+    x = rmsnorm_apply(params["final_norm"], x)
+    logits = jnp.einsum("...d,dv->...v", x,
+                        params["head"]["w"].astype(x.dtype))
+    logits = shard(logits, "batch", None, "vocab")
+    return logits[:, 0], new_state, cache_len + 1
+
+
+def prefill(params: dict, cfg: ModelConfig, rt: Runtime,
+            batch: Dict[str, jax.Array], *, cache_size: int
+            ) -> Tuple[jax.Array, Tuple[Any, ...], jax.Array]:
+    """Full-sequence forward that also populates the decode state.
+
+    Returns (last-position logits (B, Vpad), state, cache_len (B,)).
+    """
+    x = _embed_inputs(params, cfg, batch)
+    b, s, _ = x.shape
+
+    def group_body(x, gparams):
+        new_gstate = []
+        for p, btype in enumerate(cfg.block_pattern):
+            h = rmsnorm_apply(gparams[p]["norm1"], x)
+            if btype in ("attn", "local"):
+                window = cfg.window if btype == "local" else None
+                size = min(cfg.window, cache_size) if btype == "local" \
+                    else cache_size
+                y, cache = attention.attn_prefill(
+                    gparams[p]["mixer"], h, cfg, rt, window=window,
+                    cache_size=size)
+                x = x + y
+                h2 = rmsnorm_apply(gparams[p]["norm2"], x)
+                if cfg.moe is not None:
+                    y2, _ = moe_lib.moe_apply(gparams[p]["ffn"], h2, cfg)
+                else:
+                    y2 = gated_mlp_apply(gparams[p]["ffn"], h2)
+                x = x + y2
+                new_gstate.append(cache)
+            elif btype == "rglru":
+                # Inline of rglru_block_apply that also keeps the final
+                # recurrent state for decode.
+                mp = gparams[p]["mixer"]
+                xr = jnp.einsum("...d,dl->...l", h, mp["w_in"].astype(h.dtype))
+                gate = jax.nn.gelu(jnp.einsum(
+                    "...d,dl->...l", h, mp["w_gate"].astype(h.dtype)))
+                xc = recurrent._causal_conv1d(xr, mp["conv_w"], mp["conv_b"])
+                a, u = recurrent._rglru_gates(mp, xc)
+                h_seq, h_last = kops.rglru_scan(
+                    a, u, None, backend=rt.backend, interpret=rt.interpret)
+                y = jnp.einsum("...l,ld->...d", h_seq * gate,
+                               mp["w_out"].astype(h.dtype))
+                x = x + y
+                h2 = rmsnorm_apply(gparams[p]["norm2"], x)
+                x = x + gated_mlp_apply(gparams[p]["ffn"], h2)
+                new_gstate.append({
+                    "h": h_last.astype(jnp.float32),
+                    "conv_tail": xr[:, -(recurrent._CONV_WIDTH - 1):]
+                    .astype(cfg.activation_dtype)})
+            elif btype == "mlstm":
+                y, st = recurrent.mlstm_block_prefill(
+                    gparams[p]["mixer"], h, cfg, rt)
+                x = x + y
+                new_gstate.append(st)
+            elif btype == "slstm":
+                y, st = recurrent.slstm_block_prefill(
+                    gparams[p]["mixer"], h, cfg, rt)
+                x = x + y
+                new_gstate.append(st)
+            else:
+                raise ValueError(btype)
+        return x, tuple(new_gstate)
+
+    x, state = jax.lax.scan(group_body, x, params["blocks"],
+                            unroll=rt.scan_unroll)
+    x = rmsnorm_apply(params["final_norm"], x)
+    logits = jnp.einsum("...d,dv->...v", x[:, -1:],
+                        params["head"]["w"].astype(x.dtype))
+    cache_len = jnp.full((b,), s, jnp.int32)
+    return logits[:, 0], state, cache_len

@@ -1,0 +1,140 @@
+"""Mixture-of-Experts layer: top-k router, capacity dispatch, expert FFN.
+
+SMA framing (DESIGN.md §Arch-applicability): MoE routing is the modern
+GEMM-incompatible op — softmax/top-k/scatter control flow that a GEMM-only
+engine would have to contort into dense einsums over all experts (the TPU/NMS
+failure mode of the paper's Sec. II).  The SMA policy runs routing in SIMD
+mode and the expert FFNs in systolic mode, switching temporally per block.
+
+Dispatch is per-batch-row (no cross-device cumsum): each row of the batch
+routes its own S tokens with capacity C = ceil(S * top_k / E * cf).  Experts
+are sharded over the "model" mesh axis (EP); the dispatch gather's
+data->model resharding is the MoE all-to-all in the dry-run collectives.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.layers import variance_scaling_init
+
+
+def moe_init(key: jax.Array, cfg: ModelConfig) -> Tuple[dict, dict]:
+    moe = cfg.moe
+    d, f, e = cfg.d_model, moe.d_ff_expert, moe.num_experts
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    dt = cfg.parameter_dtype
+    params = {
+        "router": variance_scaling_init(kr, (d, e), dt),
+        "wi": variance_scaling_init(k1, (e, d, f), dt, fan_in=d),
+        "wg": variance_scaling_init(k2, (e, d, f), dt, fan_in=d),
+        "wo": variance_scaling_init(k3, (e, f, d), dt, fan_in=f),
+    }
+    # NOTE: experts take the "model" axis (EP); the per-expert FFN dim stays
+    # unsharded — a PartitionSpec may not reuse a mesh axis twice.
+    specs = {
+        "router": ("embed", None),
+        "wi": ("expert", "embed", None),
+        "wg": ("expert", "embed", None),
+        "wo": ("expert", None, "embed"),
+    }
+    return params, specs
+
+
+def moe_apply(params: dict, x: jax.Array, cfg: ModelConfig
+              ) -> Tuple[jax.Array, dict]:
+    """x (B, S, D) -> (y (B, S, D), aux metrics incl. losses)."""
+    moe = cfg.moe
+    b, s, d = x.shape
+    e, k = moe.num_experts, moe.top_k
+    cap = int(max(1, -(-s * k // e) * moe.capacity_factor))
+    cap = min(cap, s)
+
+    # ---- SIMD mode: routing --------------------------------------------------
+    logits = jnp.einsum("bsd,de->bse", x, params["router"].astype(x.dtype))
+    logits32 = logits.astype(jnp.float32)
+    probs = jax.nn.softmax(logits32, axis=-1)                 # (B,S,E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)           # (B,S,k)
+    if moe.norm_topk_prob:
+        gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # position of each (token, choice) within its expert's queue, per row
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.int32)   # (B,S,k,E)
+    flat_oh = onehot.reshape(b, s * k, e)
+    pos_in_e = jnp.cumsum(flat_oh, axis=1) - 1                # (B,S*k,E)
+    pos = jnp.sum(pos_in_e * flat_oh, axis=-1).reshape(b, s, k)
+    keep = pos < cap                                          # capacity drop
+
+    # scatter token ids into the (E, cap) dispatch table (sentinel = s).
+    # All dispatch gathers/scatters are vmapped over the batch row: explicit
+    # batch indices would make GSPMD replicate the *global* batch and emit a
+    # full-size all-reduce per layer (measured 25.8 GB/layer on dbrx —
+    # EXPERIMENTS §Perf A1); with vmap the batch dim stays sharded and only
+    # the inherent expert-axis combine reduction remains.
+    e_flat = expert_idx.reshape(b, s * k)
+    p_flat = jnp.where(keep.reshape(b, s * k), pos.reshape(b, s * k), cap)
+    tok_ids = jnp.broadcast_to(jnp.arange(s)[:, None], (s, k)).reshape(s * k)
+
+    def row_table(e_row, p_row):
+        t = jnp.full((e, cap + 1), s, jnp.int32)
+        return t.at[e_row, p_row].set(tok_ids, mode="drop")
+
+    dispatch_idx = jax.vmap(row_table)(e_flat, p_flat)[:, :, :cap]  # (B,E,cap)
+
+    # ---- gather + systolic mode: expert FFNs ---------------------------------
+    # Sharding choreography (the beyond-paper collective optimization, see
+    # EXPERIMENTS §Perf): x_pad is batch-sharded but *replicated* over the
+    # expert ("model") axis while dispatch_idx is expert-sharded — so the
+    # gather is local per (data, model) shard and GSPMD never falls back to
+    # its replicate+mask+all-reduce pattern.  Expert weights are pre-cast to
+    # the compute dtype while still FSDP-sharded, so the per-layer parameter
+    # all-gather moves bf16 instead of f32.
+    x_pad = jnp.concatenate([x, jnp.zeros((b, 1, d), x.dtype)], axis=1)
+    x_pad = shard(x_pad, "batch", None, "embed_act")
+    dispatch_idx = shard(dispatch_idx, "batch", "expert", None)
+    xe = jax.vmap(lambda xrow, idx: xrow[idx])(x_pad, dispatch_idx)
+    xe = shard(xe, "batch", "expert", None, "embed_act")      # (B,E,cap,D)
+    wi = shard(params["wi"].astype(x.dtype), "expert", "embed", None)
+    wg = shard(params["wg"].astype(x.dtype), "expert", "embed", None)
+    wo = shard(params["wo"].astype(x.dtype), "expert", None, "embed")
+    h = jnp.einsum("becd,edf->becf", xe, wi)
+    g = jnp.einsum("becd,edf->becf", xe, wg)
+    h = shard(jax.nn.silu(g) * h, "batch", "expert", None, None)
+    ye = jnp.einsum("becf,efd->becd", h, wo)
+    ye = shard(ye, "batch", "expert", None, "embed_act")
+
+    # ---- SIMD mode: weighted combine -----------------------------------------
+    # Gate weight per (expert, slot), scattered exactly like the token ids;
+    # combine is a vmapped per-row scatter-add (see dispatch note above).
+    gates_flat = jnp.where(keep, gate_vals, 0.0).reshape(b, s * k)
+
+    def row_gates(e_row, p_row, g_row):
+        t = jnp.zeros((e, cap + 1), jnp.float32)
+        return t.at[e_row, p_row].set(g_row, mode="drop")
+
+    gate_table = jax.vmap(row_gates)(e_flat, p_flat, gates_flat)
+    ye32 = ye.astype(jnp.float32) * gate_table[:, :, :cap, None]
+
+    def row_combine(idx, vals):
+        return jnp.zeros((s + 1, d), jnp.float32).at[idx].add(vals)
+
+    y = jax.vmap(row_combine)(dispatch_idx, ye32)
+    y = y[:, :s].astype(x.dtype)
+
+    # ---- aux losses (load balance + router z-loss) ---------------------------
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(expert_idx, e, dtype=jnp.float32), axis=(1, 2))  # (B,E)
+    mean_probs = jnp.mean(probs, axis=1)                                # (B,E)
+    lb_loss = e * jnp.mean(jnp.sum(frac_tokens * mean_probs, axis=-1))
+    z_loss = jnp.mean(jax.scipy.special.logsumexp(logits32, axis=-1) ** 2)
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    aux = {
+        "moe_lb_loss": lb_loss * moe.lb_loss_coef,
+        "moe_z_loss": z_loss * moe.z_loss_coef,
+        "moe_drop_frac": dropped,
+    }
+    return y, aux

@@ -1,0 +1,410 @@
+"""Recurrent blocks: Griffin RG-LRU (recurrentgemma) and xLSTM (mLSTM/sLSTM).
+
+These are the framework's GEMM-incompatible workhorses — the modern
+equivalents of the paper's CRF/NMS ops (DESIGN.md §Arch-applicability).  Each
+block interleaves systolic-mode projections with SIMD-mode recurrences, which
+is exactly the temporal multi-mode pattern SMA exists for.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.kernels import ops as kops
+from repro.models.layers import Runtime, variance_scaling_init
+
+_CONV_WIDTH = 4
+_RGLRU_C = 8.0
+
+
+# ===========================================================================
+# Griffin recurrent block (conv1d + RG-LRU), recurrentgemma-style.
+# ===========================================================================
+def rglru_block_init(key: jax.Array, cfg: ModelConfig) -> Tuple[dict, dict]:
+    d = cfg.d_model
+    lru = d  # lru_width == d_model (recurrentgemma-2b)
+    ks = jax.random.split(key, 7)
+    dt = cfg.parameter_dtype
+    params = {
+        "w_in": variance_scaling_init(ks[0], (d, lru), dt),
+        "w_gate": variance_scaling_init(ks[1], (d, lru), dt),
+        "conv_w": variance_scaling_init(ks[2], (_CONV_WIDTH, lru), dt,
+                                        fan_in=_CONV_WIDTH),
+        "conv_b": jnp.zeros((lru,), dt),
+        "w_a": variance_scaling_init(ks[3], (lru, lru), dt),
+        "b_a": jnp.zeros((lru,), dt),
+        "w_x": variance_scaling_init(ks[4], (lru, lru), dt),
+        "b_x": jnp.zeros((lru,), dt),
+        "lambda_raw": (jax.random.uniform(ks[5], (lru,), jnp.float32,
+                                          0.744, 0.999)).astype(dt),
+        "w_out": variance_scaling_init(ks[6], (lru, d), dt, fan_in=lru),
+    }
+    specs = {
+        "w_in": ("embed", "mlp"), "w_gate": ("embed", "mlp"),
+        "conv_w": (None, "mlp"), "conv_b": ("mlp",),
+        "w_a": ("embed", "mlp"), "b_a": ("mlp",),
+        "w_x": ("embed", "mlp"), "b_x": ("mlp",),
+        "lambda_raw": ("mlp",),
+        "w_out": ("mlp", "embed"),
+    }
+    return params, specs
+
+
+def _causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+                   tail: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv, width 4.  x (B,S,C); tail (B,3,C) or None."""
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], _CONV_WIDTH - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+              for i in range(_CONV_WIDTH))
+    return out + b.astype(x.dtype)
+
+
+def _rglru_gates(params: dict, xc: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Per-step decay a_t and gated input u_t from the conv output."""
+    dtype = xc.dtype
+    r = jax.nn.sigmoid(jnp.einsum("...c,cl->...l", xc,
+                                  params["w_a"].astype(dtype))
+                       + params["b_a"].astype(dtype))
+    i = jax.nn.sigmoid(jnp.einsum("...c,cl->...l", xc,
+                                  params["w_x"].astype(dtype))
+                       + params["b_x"].astype(dtype))
+    log_lam = -8.0 * jax.nn.softplus(params["lambda_raw"].astype(jnp.float32))
+    log_a = (log_lam * r.astype(jnp.float32) * (_RGLRU_C / 8.0))
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    u = (mult * (i * xc).astype(jnp.float32)).astype(dtype)
+    return a.astype(dtype), u
+
+
+def rglru_block_apply(params: dict, x: jax.Array, cfg: ModelConfig,
+                      rt: Runtime) -> jax.Array:
+    """Training/prefill forward.  x (B,S,D) -> (B,S,D)."""
+    dtype = x.dtype
+    xr = jnp.einsum("...d,dl->...l", x, params["w_in"].astype(dtype))
+    gate = jax.nn.gelu(jnp.einsum("...d,dl->...l", x,
+                                  params["w_gate"].astype(dtype)))
+    xc = _causal_conv1d(xr, params["conv_w"], params["conv_b"])
+    xc = shard(xc, "batch", "seq", "mlp")
+    a, u = _rglru_gates(params, xc)
+    h_seq, _ = kops.rglru_scan(a, u, None, backend=rt.backend,
+                               interpret=rt.interpret)
+    y = h_seq * gate
+    return jnp.einsum("...l,ld->...d", y, params["w_out"].astype(dtype))
+
+
+def rglru_block_init_state(cfg: ModelConfig, batch: int, dtype
+                           ) -> dict:
+    lru = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, lru), jnp.float32),
+        "conv_tail": jnp.zeros((batch, _CONV_WIDTH - 1, lru), dtype),
+    }
+
+
+def rglru_block_decode(params: dict, x: jax.Array, state: dict,
+                       cfg: ModelConfig, rt: Runtime
+                       ) -> Tuple[jax.Array, dict]:
+    """One decode step.  x (B,1,D)."""
+    dtype = x.dtype
+    xr = jnp.einsum("...d,dl->...l", x, params["w_in"].astype(dtype))
+    gate = jax.nn.gelu(jnp.einsum("...d,dl->...l", x,
+                                  params["w_gate"].astype(dtype)))
+    xc = _causal_conv1d(xr, params["conv_w"], params["conv_b"],
+                        tail=state["conv_tail"])
+    new_tail = jnp.concatenate([state["conv_tail"][:, 1:],
+                                xr.astype(state["conv_tail"].dtype)], axis=1)
+    a, u = _rglru_gates(params, xc)
+    h = (a[:, 0].astype(jnp.float32) * state["h"]
+         + u[:, 0].astype(jnp.float32))
+    y = h.astype(dtype)[:, None, :] * gate
+    out = jnp.einsum("...l,ld->...d", y, params["w_out"].astype(dtype))
+    return out, {"h": h, "conv_tail": new_tail}
+
+
+# ===========================================================================
+# xLSTM mLSTM block (matrix memory, chunkwise-parallel in training).
+# ===========================================================================
+def _mlstm_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    inner = int(cfg.d_model * cfg.mlstm_proj_factor)
+    dh = inner // cfg.num_heads
+    return inner, dh
+
+
+def mlstm_block_init(key: jax.Array, cfg: ModelConfig) -> Tuple[dict, dict]:
+    d = cfg.d_model
+    inner, dh = _mlstm_dims(cfg)
+    h = cfg.num_heads
+    ks = jax.random.split(key, 7)
+    dt = cfg.parameter_dtype
+    params = {
+        "w_up": variance_scaling_init(ks[0], (d, 2 * inner), dt),
+        "conv_w": variance_scaling_init(ks[1], (_CONV_WIDTH, inner), dt,
+                                        fan_in=_CONV_WIDTH),
+        "conv_b": jnp.zeros((inner,), dt),
+        "w_q": variance_scaling_init(ks[2], (inner, inner), dt),
+        "w_k": variance_scaling_init(ks[3], (inner, inner), dt),
+        "w_v": variance_scaling_init(ks[4], (inner, inner), dt),
+        "w_if": variance_scaling_init(ks[5], (inner, 2 * h), dt),
+        "b_if": jnp.concatenate([jnp.zeros((h,), jnp.float32),
+                                 jnp.linspace(3.0, 6.0, h)]).astype(dt),
+        "gn_scale": jnp.ones((inner,), dt),
+        "w_down": variance_scaling_init(ks[6], (inner, d), dt, fan_in=inner),
+    }
+    specs = {
+        "w_up": ("embed", "mlp"),
+        "conv_w": (None, "mlp"), "conv_b": ("mlp",),
+        "w_q": ("embed", "mlp"), "w_k": ("embed", "mlp"),
+        "w_v": ("embed", "mlp"),
+        "w_if": ("embed", None), "b_if": (None,),
+        "gn_scale": ("mlp",),
+        "w_down": ("mlp", "embed"),
+    }
+    return params, specs
+
+
+def _headwise_rms(x: jax.Array, scale: jax.Array, h: int) -> jax.Array:
+    """Per-head group-norm-lite over (..., H*dh)."""
+    lead = x.shape[:-1]
+    inner = x.shape[-1]
+    xh = x.reshape(*lead, h, inner // h).astype(jnp.float32)
+    var = jnp.mean(jnp.square(xh), axis=-1, keepdims=True)
+    xh = xh * jax.lax.rsqrt(var + 1e-6)
+    return (xh.reshape(*lead, inner) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def _mlstm_qkv_gates(params: dict, x: jax.Array, cfg: ModelConfig,
+                     conv_tail: Optional[jax.Array] = None):
+    dtype = x.dtype
+    inner, dh = _mlstm_dims(cfg)
+    h = cfg.num_heads
+    up = jnp.einsum("...d,df->...f", x, params["w_up"].astype(dtype))
+    x_m, z = up[..., :inner], up[..., inner:]
+    xc = _causal_conv1d(x_m, params["conv_w"], params["conv_b"],
+                        tail=conv_tail)
+    xc = jax.nn.silu(xc)
+    q = jnp.einsum("...f,fg->...g", xc, params["w_q"].astype(dtype))
+    k = jnp.einsum("...f,fg->...g", xc, params["w_k"].astype(dtype))
+    v = jnp.einsum("...f,fg->...g", x_m, params["w_v"].astype(dtype))
+    if_gates = (jnp.einsum("...f,fg->...g", xc,
+                           params["w_if"].astype(dtype)).astype(jnp.float32)
+                + params["b_if"].astype(jnp.float32))
+    log_i = if_gates[..., :h]
+    log_f = jax.nn.log_sigmoid(if_gates[..., h:])
+    return q, k, v, log_i, log_f, z, x_m
+
+
+def mlstm_block_apply(params: dict, x: jax.Array, cfg: ModelConfig,
+                      rt: Runtime) -> jax.Array:
+    b, s, _ = x.shape
+    inner, dh = _mlstm_dims(cfg)
+    h = cfg.num_heads
+    q, k, v, log_i, log_f, z, _ = _mlstm_qkv_gates(params, x, cfg)
+    to_heads = lambda t: t.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    qh, kh, vh = to_heads(q), to_heads(k), to_heads(v)
+    qh = shard(qh, "batch", "heads", "seq", "head_dim")
+    # NOTE: the chunk scan is never unrolled — at 4k/32k sequences that
+    # would explode probe-compile HLO; dryrun adds an analytic per-chunk
+    # correction instead (dryrun._mlstm_scan_correction).
+    out = kops.mlstm_chunkwise(qh, kh, vh,
+                               log_f.transpose(0, 2, 1),
+                               log_i.transpose(0, 2, 1),
+                               chunk=cfg.mlstm_chunk,
+                               backend=rt.backend, interpret=rt.interpret)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, inner)
+    out = _headwise_rms(out, params["gn_scale"], h)
+    out = out * jax.nn.silu(z)
+    return jnp.einsum("...f,fd->...d", out, params["w_down"].astype(x.dtype))
+
+
+def mlstm_block_prefill(params: dict, x: jax.Array, cfg: ModelConfig,
+                        rt: Runtime) -> Tuple[jax.Array, dict]:
+    """Training-path forward that also returns the decode state (prefill)."""
+    b, s, _ = x.shape
+    inner, dh = _mlstm_dims(cfg)
+    h = cfg.num_heads
+    q, k, v, log_i, log_f, z, x_m = _mlstm_qkv_gates(params, x, cfg)
+    to_heads = lambda t: t.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    out, (c, n, m) = kops.mlstm_chunkwise(
+        to_heads(q), to_heads(k), to_heads(v),
+        log_f.transpose(0, 2, 1), log_i.transpose(0, 2, 1),
+        chunk=cfg.mlstm_chunk, backend=rt.backend, interpret=rt.interpret,
+        return_state=True)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, inner)
+    out = _headwise_rms(out, params["gn_scale"], h)
+    out = out * jax.nn.silu(z)
+    y = jnp.einsum("...f,fd->...d", out, params["w_down"].astype(x.dtype))
+    state = {"c": c, "n": n, "m": m,
+             "conv_tail": x_m[:, -(_CONV_WIDTH - 1):]
+             .astype(cfg.activation_dtype)}
+    return y, state
+
+
+def mlstm_block_init_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    inner, dh = _mlstm_dims(cfg)
+    h = cfg.num_heads
+    return {
+        "c": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.zeros((batch, h), jnp.float32),
+        "conv_tail": jnp.zeros((batch, _CONV_WIDTH - 1, inner), dtype),
+    }
+
+
+def mlstm_block_decode(params: dict, x: jax.Array, state: dict,
+                       cfg: ModelConfig, rt: Runtime
+                       ) -> Tuple[jax.Array, dict]:
+    """One decode step: sequential mLSTM update.  x (B,1,D)."""
+    b = x.shape[0]
+    inner, dh = _mlstm_dims(cfg)
+    h = cfg.num_heads
+    q, k, v, log_i, log_f, z, x_m = _mlstm_qkv_gates(
+        params, x, cfg, conv_tail=state["conv_tail"])
+    new_tail = jnp.concatenate(
+        [state["conv_tail"][:, 1:], x_m.astype(state["conv_tail"].dtype)],
+        axis=1)
+    to_heads = lambda t: t[:, 0].reshape(b, h, dh).astype(jnp.float32)
+    q1, k1, v1 = to_heads(q), to_heads(k), to_heads(v)
+    q1 = q1 * (dh ** -0.5)
+    lf, li = log_f[:, 0], log_i[:, 0]                      # (B, H)
+    m_new = jnp.maximum(lf + state["m"], li)
+    f_t = jnp.exp(lf + state["m"] - m_new)
+    i_t = jnp.exp(li - m_new)
+    c = (f_t[..., None, None] * state["c"]
+         + i_t[..., None, None] * (k1[..., None] * v1[..., None, :]))
+    n = f_t[..., None] * state["n"] + i_t[..., None] * k1
+    num = jnp.einsum("bhde,bhd->bhe", c, q1)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q1)),
+                      jnp.exp(-m_new))[..., None]
+    out = (num / den).reshape(b, 1, inner).astype(x.dtype)
+    out = _headwise_rms(out, params["gn_scale"], h)
+    out = out * jax.nn.silu(z)
+    y = jnp.einsum("...f,fd->...d", out, params["w_down"].astype(x.dtype))
+    return y, {"c": c, "n": n, "m": m_new, "conv_tail": new_tail}
+
+
+# ===========================================================================
+# xLSTM sLSTM block (scalar memory; inherently sequential).
+# ===========================================================================
+def slstm_block_init(key: jax.Array, cfg: ModelConfig) -> Tuple[dict, dict]:
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    # xLSTM sLSTM post-FF: ~4/3 expansion, rounded up to a lane/TP-friendly
+    # multiple of 128 (2731 -> 2816 at d=2048).
+    ff = -(-int(math.ceil(4.0 * d / 3.0)) // 128) * 128
+    ks = jax.random.split(key, 4)
+    dt = cfg.parameter_dtype
+    params = {
+        "w_gates": variance_scaling_init(ks[0], (d, 4 * d), dt),
+        "r_gates": variance_scaling_init(ks[1], (h, dh, 4 * dh), dt,
+                                         fan_in=dh),
+        "b_gates": jnp.zeros((4 * d,), dt),
+        "gn_scale": jnp.ones((d,), dt),
+        "w_ff1": variance_scaling_init(ks[2], (d, ff), dt),
+        "w_ff2": variance_scaling_init(ks[3], (ff, d), dt, fan_in=ff),
+    }
+    specs = {
+        "w_gates": ("embed", "mlp"), "r_gates": ("heads", None, None),
+        "b_gates": ("mlp",), "gn_scale": (None,),
+        "w_ff1": ("embed", "mlp"), "w_ff2": ("mlp", "embed"),
+    }
+    return params, specs
+
+
+def _slstm_step(params: dict, wx_t: jax.Array, state: dict, h_heads: int
+                ) -> Tuple[jax.Array, dict]:
+    """One sLSTM step.  wx_t (B, 4D) precomputed W x_t (+bias)."""
+    b = wx_t.shape[0]
+    d4 = wx_t.shape[-1]
+    d = d4 // 4
+    dh = d // h_heads
+    h_prev = state["h"]                                     # (B, H, dh) f32
+    rec = jnp.einsum("bhd,hdf->bhf", h_prev,
+                     params["r_gates"].astype(jnp.float32))  # (B,H,4dh)
+    gates = wx_t.astype(jnp.float32).reshape(b, h_heads, 4 * dh) + rec
+    li, lf, z_raw, o_raw = jnp.split(gates, 4, axis=-1)     # (B,H,dh) each
+    lf = jax.nn.log_sigmoid(lf)
+    m_new = jnp.maximum(lf + state["m"], li)
+    i_t = jnp.exp(li - m_new)
+    f_t = jnp.exp(lf + state["m"] - m_new)
+    z = jnp.tanh(z_raw)
+    o = jax.nn.sigmoid(o_raw)
+    c = f_t * state["c"] + i_t * z
+    n = jnp.maximum(f_t * state["n"] + i_t, 1e-6)
+    h_new = o * (c / n)
+    return h_new, {"c": c, "n": n, "m": m_new, "h": h_new}
+
+
+def slstm_block_apply(params: dict, x: jax.Array, cfg: ModelConfig,
+                      rt: Runtime) -> jax.Array:
+    b, s, d = x.shape
+    h_heads = cfg.num_heads
+    wx = (jnp.einsum("...d,df->...f", x, params["w_gates"].astype(x.dtype))
+          + params["b_gates"].astype(x.dtype))
+
+    def step(state, wx_t):
+        h_new, new_state = _slstm_step(params, wx_t, state, h_heads)
+        return new_state, h_new
+
+    state0 = slstm_block_init_state(cfg, b, x.dtype)
+    _, hs = jax.lax.scan(step, state0, wx.swapaxes(0, 1))
+    hs = hs.swapaxes(0, 1).reshape(b, s, d).astype(x.dtype)  # (B,S,H,dh)->D
+    hs = _headwise_rms(hs, params["gn_scale"], h_heads)
+    ff = jax.nn.gelu(jnp.einsum("...d,df->...f", hs,
+                                params["w_ff1"].astype(x.dtype)))
+    return jnp.einsum("...f,fd->...d", ff, params["w_ff2"].astype(x.dtype))
+
+
+def slstm_block_prefill(params: dict, x: jax.Array, cfg: ModelConfig,
+                        rt: Runtime) -> Tuple[jax.Array, dict]:
+    """Training-path forward returning the final recurrent state (prefill)."""
+    b, s, d = x.shape
+    h_heads = cfg.num_heads
+    wx = (jnp.einsum("...d,df->...f", x, params["w_gates"].astype(x.dtype))
+          + params["b_gates"].astype(x.dtype))
+
+    def step(state, wx_t):
+        h_new, new_state = _slstm_step(params, wx_t, state, h_heads)
+        return new_state, h_new
+
+    state0 = slstm_block_init_state(cfg, b, x.dtype)
+    final_state, hs = jax.lax.scan(step, state0, wx.swapaxes(0, 1))
+    hs = hs.swapaxes(0, 1).reshape(b, s, d).astype(x.dtype)
+    hs = _headwise_rms(hs, params["gn_scale"], h_heads)
+    ff = jax.nn.gelu(jnp.einsum("...d,df->...f", hs,
+                                params["w_ff1"].astype(x.dtype)))
+    y = jnp.einsum("...f,fd->...d", ff, params["w_ff2"].astype(x.dtype))
+    return y, final_state
+
+
+def slstm_block_init_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    h = cfg.num_heads
+    dh = cfg.d_model // h
+    z = jnp.zeros((batch, h, dh), jnp.float32)
+    return {"c": z, "n": z + 1e-6, "m": jnp.zeros((batch, h, dh), jnp.float32),
+            "h": z}
+
+
+def slstm_block_decode(params: dict, x: jax.Array, state: dict,
+                       cfg: ModelConfig, rt: Runtime
+                       ) -> Tuple[jax.Array, dict]:
+    b = x.shape[0]
+    h_heads = cfg.num_heads
+    wx = (jnp.einsum("...d,df->...f", x, params["w_gates"].astype(x.dtype))
+          + params["b_gates"].astype(x.dtype))[:, 0]
+    h_new, new_state = _slstm_step(params, wx, state, h_heads)
+    hs = h_new.reshape(b, 1, -1).astype(x.dtype)
+    hs = _headwise_rms(hs, params["gn_scale"], h_heads)
+    ff = jax.nn.gelu(jnp.einsum("...d,df->...f", hs,
+                                params["w_ff1"].astype(x.dtype)))
+    y = jnp.einsum("...f,fd->...d", ff, params["w_ff2"].astype(x.dtype))
+    return y, new_state

@@ -1,0 +1,84 @@
+"""Gradient compression with error feedback (int8, per-tensor scale).
+
+Distributed-optimization feature for the cross-pod data-parallel all-reduce:
+the inter-pod links are the scarcest bandwidth in the production mesh (ICI
+within a pod, DCN between pods), so gradients crossing pods are quantized to
+int8 with error-feedback accumulation (Seide et al.; 1-bit Adam lineage).
+
+Two integration points:
+
+* :func:`compress_grads` / :func:`decompress` — optimizer-side simulation
+  (quantize -> dequantize with an error-feedback carry), used by the trainer
+  to bound end-to-end quality impact and by tests to verify the EF invariant.
+* :func:`compressed_psum` — the real collective: inside ``shard_map``,
+  all-gather int8 shards over the named axis and reduce locally in f32.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _quant_one(g: jax.Array, e: jax.Array
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Quantize g+e to int8; returns (q, scale, new_error)."""
+    g32 = g.astype(jnp.float32) + e
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, g32 - deq
+
+
+def init_error(params) -> Dict:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(grads, error):
+    """Returns ((q_tree, scale_tree), new_error_tree)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(error)
+    qs, scales, errs = [], [], []
+    for g, e in zip(flat_g, flat_e):
+        q, s, ne = _quant_one(g, e)
+        qs.append(q)
+        scales.append(s)
+        errs.append(ne)
+    return ((treedef.unflatten(qs), treedef.unflatten(scales)),
+            treedef.unflatten(errs))
+
+
+def decompress(compressed, like=None):
+    q_tree, scale_tree = compressed
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s,
+                        q_tree, scale_tree)
+
+
+def roundtrip(grads, error):
+    """Quantize+dequantize with error feedback — the trainer-side hook."""
+    compressed, new_error = compress_grads(grads, error)
+    return decompress(compressed), new_error
+
+
+def compression_ratio(grads) -> float:
+    """fp32 bytes / int8 bytes (+scale overhead)."""
+    n = sum(g.size for g in jax.tree.leaves(grads))
+    tensors = len(jax.tree.leaves(grads))
+    return (4.0 * n) / (n + 4.0 * tensors)
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """int8 all-gather + local f32 reduce over a named axis (in shard_map).
+
+    Semantics: mean over the axis of int8-quantized contributions.  ~4x less
+    traffic than an f32 all-reduce (all-gather of int8 == ring all-reduce of
+    f32/4 per link), at int8 rounding precision — pair with error feedback.
+    """
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32))), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127) \
+        .astype(jnp.int8)
+    qs = jax.lax.all_gather(q, axis_name)            # (n_dev, ...)
+    ss = jax.lax.all_gather(scale, axis_name)
+    deq = qs.astype(jnp.float32) * ss.reshape((-1,) + (1,) * x.ndim)
+    return jnp.mean(deq, axis=0).astype(x.dtype)
