@@ -1,0 +1,75 @@
+"""Compile-report harness: one SMA plan report per assigned model family.
+
+Traces every config in ``repro.configs`` through the full compiler pipeline
+(trace → lower → plan) at FULL scale using ``jax.ShapeDtypeStruct``
+placeholders — no parameter memory is allocated, so the 132B-class configs
+report in seconds on a laptop.  Emits one JSON report per family
+(``benchmarks/run.py --compile-report [--report-dir DIR]``).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def family_report(arch: str, *, seq_len: int = 512, batch: int = 1,
+                  reduced: bool = False) -> Dict[str, Any]:
+    """Compile one architecture and return its plan report."""
+    import repro.configs as C
+    from repro import compiler
+    from repro.models import lm
+    from repro.models.layers import Runtime
+
+    cfg = C.get_config(arch)
+    if reduced:
+        cfg = C.reduced(cfg)
+    rt = Runtime(backend="xla", remat=False)
+
+    s = max(seq_len, cfg.num_vision_tokens + 64)
+    if cfg.input_mode == "tokens":
+        batch_shapes = {"tokens": jax.ShapeDtypeStruct((batch, s),
+                                                       jnp.int32)}
+    elif cfg.input_mode == "embeds":
+        batch_shapes = {"embeds": jax.ShapeDtypeStruct(
+            (batch, s, cfg.d_model), jnp.float32)}
+    else:
+        nv = cfg.num_vision_tokens
+        batch_shapes = {
+            "tokens": jax.ShapeDtypeStruct((batch, s - nv), jnp.int32),
+            "vision_embeds": jax.ShapeDtypeStruct((batch, nv, cfg.d_model),
+                                                  jnp.float32),
+        }
+
+    p_shapes = jax.eval_shape(lambda k: lm.init(k, cfg)[0],
+                              jax.random.PRNGKey(0))
+    compiled = compiler.compile_model(
+        lambda p, b: lm.forward(p, cfg, rt, b), p_shapes, batch_shapes,
+        name=cfg.name)
+    report = compiled.report
+    report["family"] = cfg.family
+    report["traced_shape"] = {"batch": batch, "seq_len": s}
+    report["params"] = cfg.param_count()
+    return report
+
+
+def run(report_dir: Optional[str] = None, *, seq_len: int = 512,
+        batch: int = 1, reduced: bool = False) -> None:
+    """Print one JSON report per family; optionally write files."""
+    import repro.configs as C
+    from repro.compiler import render_text, write_report
+
+    if report_dir:
+        os.makedirs(report_dir, exist_ok=True)
+    for arch in C.ARCH_IDS:
+        report = family_report(arch, seq_len=seq_len, batch=batch,
+                               reduced=reduced)
+        print(render_text(report))
+        print(json.dumps(report, sort_keys=True))
+        if report_dir:
+            path = os.path.join(report_dir, f"{arch}.plan.json")
+            write_report(report, path)
+            print(f"# wrote {path}")

@@ -4,13 +4,35 @@ rows.  Prints ``name,us_per_call,derived`` CSV, then the claims scoreboard.
 from __future__ import annotations
 
 import argparse
+import os
+import sys
+
+# Support both `python -m benchmarks.run` and `python benchmarks/run.py`.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-kernels", action="store_true",
                     help="skip wall-clock kernel benches (CPU-heavy)")
+    ap.add_argument("--compile-report", action="store_true",
+                    help="emit one jaxpr->SMA plan report (JSON) per model "
+                         "family instead of running benchmarks")
+    ap.add_argument("--report-dir", default=None,
+                    help="with --compile-report: also write one "
+                         "<arch>.plan.json per family into this directory")
+    ap.add_argument("--report-seq", type=int, default=512,
+                    help="sequence length for --compile-report tracing")
+    ap.add_argument("--report-reduced", action="store_true",
+                    help="trace reduced (smoke) configs instead of full "
+                         "scale")
     args, _ = ap.parse_known_args()
+
+    if args.compile_report:
+        from benchmarks import compile_report
+        compile_report.run(args.report_dir, seq_len=args.report_seq,
+                           reduced=args.report_reduced)
+        return
 
     from benchmarks import paper_figs, roofline_report
 

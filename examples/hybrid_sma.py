@@ -1,12 +1,17 @@
-"""The paper's hybrid-model story, end to end.
+"""The paper's hybrid-model story, end to end — through the compiler.
 
 Builds a hybrid workload (GEMM backbone + GEMM-incompatible ops: top-k
 proposal selection à la NMS, gather-based RoI pooling, an iterative
 CRF-like refinement) and runs it three ways:
 
-  1. **JAX/SMA execution** — the real computation, with the SMA policy
-     planning temporal modes and fusion (what the framework does on TPU).
-  2. **Analytical platform comparison** — the same workload on the paper's
+  1. **Compile: trace → plan** — ``repro.compiler`` traces the JAX function
+     to a jaxpr, lowers it to the symbolic op IR, and the SMA policy plans
+     temporal modes + fusion groups.  No hand-written op lists: the plan is
+     derived from the program itself.
+  2. **Execute through the plan** — the compiled callable dispatches every
+     SYSTOLIC-anchored GEMM to the fused ``sma_gemm`` entry point and
+     matches the native JAX result.
+  3. **Analytical platform comparison** — the same workload on the paper's
      three platforms (GPU+TC baseline, GEMM-only lowering à la TPU, SMA),
      via the calibrated dataflow model: Fig. 2/3/8 in one script.
 
@@ -14,9 +19,11 @@ Run:  PYTHONPATH=src python examples/hybrid_sma.py
 """
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import SMAPolicy, dataflow as df
-from repro.core.modes import ExecMode, Op, OpKind
+from repro import compiler
+from repro.core import dataflow as df
+from repro.core.modes import OpKind, mode_histogram
 
 # ---------------------------------------------------------------------------
 # 1) A hybrid model in JAX: backbone GEMMs + NMS-like + CRF-like ops.
@@ -29,7 +36,6 @@ w1 = jax.random.normal(jax.random.PRNGKey(1), (C_dim, C_dim)) / C_dim ** 0.5
 w2 = jax.random.normal(jax.random.PRNGKey(2), (C_dim, N_cls)) / C_dim ** 0.5
 
 
-@jax.jit
 def hybrid_forward(feats):
     # systolic mode: backbone
     h = jax.nn.relu(feats @ w1)
@@ -48,40 +54,48 @@ def hybrid_forward(feats):
     return q.argmax(-1), pooled, top_scores
 
 
-labels, pooled, top_scores = hybrid_forward(feats)
-print(f"[hybrid] JAX forward: labels {labels.shape}, "
-      f"pooled {pooled.shape}, proposals {top_scores.shape}")
-
 # ---------------------------------------------------------------------------
-# 2) SMA policy plan for this workload.
+# 2) Compile: trace -> lower -> SMA plan.  The op list is DERIVED from the
+#    jaxpr — dot_general->MATMUL, softmax->REDUCTION+ELEMENTWISE,
+#    top_k->TOPK, take_along_axis->GATHER_SCATTER; the short CRF loop
+#    unrolls (long loops coarsen to a RECURRENCE carry marker instead).
 # ---------------------------------------------------------------------------
-tok = float(B * HW)
-plan = [
-    Op("backbone_fc1", OpKind.MATMUL, flops=2 * tok * C_dim * C_dim,
-       bytes_in=tok * C_dim * 4),
-    Op("relu", OpKind.ELEMENTWISE, flops=tok * C_dim, bytes_in=tok * C_dim * 4),
-    Op("cls_head", OpKind.MATMUL, flops=2 * tok * C_dim * N_cls),
-    Op("softmax_scores", OpKind.REDUCTION, flops=5 * tok * N_cls,
-       bytes_in=tok * N_cls * 4),
-    Op("topk_proposals", OpKind.TOPK, flops=tok * 10, tile_local=False),
-    Op("roi_gather", OpKind.GATHER_SCATTER, flops=0.0, tile_local=False),
-    Op("crf_refine", OpKind.RECURRENCE, flops=5 * 2 * tok * N_cls * N_cls,
-       tile_local=False),
-    Op("argmax", OpKind.REDUCTION, flops=tok * N_cls, tile_local=False),
-]
-summary = SMAPolicy().summarize(plan)
-hist_flops = {m.value: f"{v:.1%}" for m, v in
-              __import__("repro.core.modes", fromlist=["mode_histogram"])
-              .mode_histogram(plan).items()}
-print(f"[hybrid] mode mix (FLOPs): {hist_flops}")
+compiled = compiler.compile_model(hybrid_forward, feats,
+                                  name="hybrid-detector", backend="xla")
+summary = compiled.summary
+hist = {m.value: f"{v:.1%}" for m, v in
+        mode_histogram(compiled.plan.ops).items()}
+kinds = sorted({op.kind for op in compiled.plan.ops}, key=lambda k: k.value)
+print(f"[hybrid] lowered {len(compiled.plan.ops)} ops "
+      f"({compiled.traced.num_eqns} jaxpr eqns), kinds: "
+      f"{[k.value for k in kinds]}")
+print(f"[hybrid] mode mix (FLOPs): {hist}")
 print(f"[hybrid] plan: {summary.groups} groups, "
       f"{summary.mode_switches} temporal mode switches, "
       f"{summary.fused_simd_ops} fused SIMD epilogues, "
       f"{summary.hbm_bytes_avoided/1e6:.1f} MB HBM avoided")
+assert OpKind.TOPK in set(kinds) and OpKind.GATHER_SCATTER in set(kinds)
 
 # ---------------------------------------------------------------------------
-# 3) Platform comparison via the calibrated dataflow model (paper Fig. 3/8).
+# 3) Execute through the plan: systolic groups dispatch to sma_gemm.
 # ---------------------------------------------------------------------------
+labels, pooled, top_scores = compiled(feats)
+want_labels, want_pooled, want_scores = hybrid_forward(feats)
+np.testing.assert_array_equal(np.asarray(labels), np.asarray(want_labels))
+np.testing.assert_allclose(np.float32(pooled), np.float32(want_pooled),
+                           rtol=1e-4, atol=1e-4)
+disp = compiled.report["dispatch"]
+print(f"[hybrid] dispatched: labels {labels.shape}, pooled {pooled.shape}, "
+      f"proposals {top_scores.shape} — "
+      f"{disp['systolic_dispatch_sites']} GEMM sites via sma_gemm, "
+      f"{disp['native_dot_sites']} native (batched)")
+
+# ---------------------------------------------------------------------------
+# 4) Platform comparison via the calibrated dataflow model (paper Fig. 3/8).
+#    SIMD-op time models stay hand-calibrated (lowering penalties are
+#    per-platform microarchitecture, not derivable from the jaxpr).
+# ---------------------------------------------------------------------------
+tok = float(B * HW)
 gemms = [df.GemmShape(int(tok), C_dim, C_dim, "fc1"),
          df.GemmShape(int(tok), N_cls, C_dim, "cls")]
 simd_ops = [

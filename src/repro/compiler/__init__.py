@@ -1,0 +1,50 @@
+"""``repro.compiler`` — the jaxpr→SMA plan compiler.
+
+Turns any jittable JAX model function into a temporally-planned SMA program,
+converting the paper's planner from an artifact that consumed hand-written
+op lists into the framework's actual execution front-end:
+
+1. :mod:`trace`    — ``jax.make_jaxpr`` over the model function (shape-only;
+   ``jax.ShapeDtypeStruct`` args let 100B+-parameter configs trace for free);
+2. :mod:`lower`    — jaxpr equations → the symbolic ``Op`` IR of
+   :mod:`repro.core.modes` with FLOP/byte costs inferred from avals;
+3. :mod:`fuse`     — :class:`repro.core.sma.SMAPolicy` plans temporal mode
+   assignment and fusion groups over the lowered program;
+4. :mod:`dispatch` — a jaxpr interpreter executes the program, routing every
+   SYSTOLIC-anchored GEMM through :func:`repro.kernels.ops.sma_gemm`
+   (pallas / interpret / xla backends per the framework contract);
+5. :mod:`report`   — machine-readable plan summaries (mode switches, fused
+   epilogues, HBM bytes avoided, systolic FLOP share).
+
+Front door::
+
+    compiled = compiler.compile_model(fn, example_args)
+    out = compiled(real_args)          # systolic groups -> sma_gemm
+    compiled.summary                   # PlanSummary
+    compiled.report                    # JSON-safe plan report
+"""
+from repro.compiler.dispatch import (CompiledModel, compile_model,
+                                     count_dispatch_sites, sma_eligible)
+from repro.compiler.fuse import ModelPlan, plan_program
+from repro.compiler.lower import (LoweredProgram, LowerStats,
+                                  dot_general_cost, lower_jaxpr)
+from repro.compiler.report import plan_report, render_text, write_report
+from repro.compiler.trace import TracedModel, trace_model
+
+__all__ = [
+    "CompiledModel",
+    "compile_model",
+    "count_dispatch_sites",
+    "sma_eligible",
+    "ModelPlan",
+    "plan_program",
+    "LoweredProgram",
+    "LowerStats",
+    "dot_general_cost",
+    "lower_jaxpr",
+    "plan_report",
+    "render_text",
+    "write_report",
+    "TracedModel",
+    "trace_model",
+]

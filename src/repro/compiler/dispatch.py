@@ -1,0 +1,266 @@
+"""Stage 4 — dispatch: execute the traced program, routing SYSTOLIC-anchored
+GEMMs through the fused SMA kernel entry points.
+
+The dispatcher is a jaxpr interpreter.  Most equations re-bind their
+primitive unchanged; the exceptions implement the SMA execution contract:
+
+* every ``dot_general`` of the LSMA-eligible shape — single contracting
+  dimension, no batch dimensions, 2-D stationary operand — is the anchor of
+  a SYSTOLIC fusion group in the plan (``MODE_OF[MATMUL] is SYSTOLIC``), and
+  is executed through :func:`repro.kernels.ops.sma_gemm`, which dispatches
+  per the framework backend contract (``pallas`` on TPU, ``interpret`` for
+  kernel-logic tests on CPU, ``xla`` for dry-runs);
+* batched contractions (attention q@k^T / p@v) and everything SIMD-mode
+  re-bind natively — on TPU those are exactly the ops XLA places on the VPU;
+* higher-order primitives (``scan``/``while``/``cond``/``pjit``/custom-vjp
+  wrappers) are re-built around recursively interpreted bodies, so GEMMs
+  *inside* layer-group scans dispatch too.
+
+Because every handler is jax-traceable, the interpreted callable can itself
+be ``jax.jit``-ed (``compile_model(..., jit=True)``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import core
+
+from repro.compiler.fuse import ModelPlan, plan_program
+from repro.compiler.lower import lower_jaxpr
+from repro.compiler.report import plan_report
+from repro.compiler.trace import TracedModel, subjaxprs, trace_model
+from repro.core.sma import SMAPolicy
+
+
+# --------------------------------------------------------------------------
+# Eligibility: which dot_generals take the systolic entry point.
+# --------------------------------------------------------------------------
+def sma_eligible(eqn) -> bool:
+    """True for ``(..., K) @ (K, N)`` contractions — the LSMA macro-op shape.
+
+    ``kernels.sma_gemm`` collapses the leading dims of A into the output
+    grid's M; batched dots (attention) keep their native lowering.
+    """
+    if eqn.primitive.name != "dot_general":
+        return False
+    (lhs_c, rhs_c), (lhs_b, rhs_b) = eqn.params["dimension_numbers"]
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    return (not lhs_b and not rhs_b
+            and len(lhs_c) == 1 and len(rhs_c) == 1
+            and rhs.ndim == 2 and rhs_c[0] == 0
+            and lhs_c[0] == lhs.ndim - 1
+            and lhs.ndim >= 2)
+
+
+def count_dispatch_sites(jaxpr: core.Jaxpr) -> Dict[str, int]:
+    """Static census of dot_general *code sites*: systolic vs native.
+
+    Counts every site in the program text, including all ``cond`` branches
+    (only one executes per call) — unlike the plan, which lowers just the
+    most expensive branch.
+    """
+    counts = {"systolic_dispatch_sites": 0, "native_dot_sites": 0}
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "dot_general":
+            key = ("systolic_dispatch_sites" if sma_eligible(eqn)
+                   else "native_dot_sites")
+            counts[key] += 1
+        for sub in subjaxprs(eqn):
+            inner = count_dispatch_sites(sub)
+            for k in counts:
+                counts[k] += inner[k]
+    return counts
+
+
+# --------------------------------------------------------------------------
+# The interpreter
+# --------------------------------------------------------------------------
+class _Interpreter:
+    def __init__(self, backend: Optional[str], interpret: bool) -> None:
+        self.backend = backend
+        self.interpret = interpret
+
+    # -------------------------------------------------------------- eval
+    def eval_closed(self, closed: core.ClosedJaxpr, args) -> List[Any]:
+        return self.eval(closed.jaxpr, closed.consts, args)
+
+    def eval(self, jaxpr: core.Jaxpr, consts, args) -> List[Any]:
+        env: Dict[Any, Any] = {}
+
+        def read(v):
+            return v.val if isinstance(v, core.Literal) else env[v]
+
+        def write(v, val):
+            env[v] = val
+
+        for var, val in zip(jaxpr.constvars, consts):
+            write(var, val)
+        for var, val in zip(jaxpr.invars, args):
+            write(var, val)
+
+        for eqn in jaxpr.eqns:
+            invals = [read(v) for v in eqn.invars]
+            prim = eqn.primitive.name
+            if prim == "dot_general" and sma_eligible(eqn):
+                outvals = [self._dot(eqn, invals)]
+            elif prim == "pjit":
+                outvals = self.eval_closed(eqn.params["jaxpr"], invals)
+            elif prim in ("closed_call", "core_call", "xla_call"):
+                outvals = self.eval_closed(eqn.params["call_jaxpr"], invals)
+            elif prim in ("remat", "checkpoint"):
+                outvals = self.eval(eqn.params["jaxpr"], (), invals)
+            elif prim in ("custom_jvp_call", "custom_vjp_call"):
+                outvals = self._closed_or_open(eqn.params["call_jaxpr"],
+                                               invals)
+            elif prim in ("custom_jvp_call_jaxpr", "custom_vjp_call_jaxpr"):
+                outvals = self._closed_or_open(eqn.params["fun_jaxpr"],
+                                               invals)
+            elif prim == "scan":
+                outvals = self._scan(eqn, invals)
+            elif prim == "while":
+                outvals = self._while(eqn, invals)
+            elif prim == "cond":
+                outvals = self._cond(eqn, invals)
+            else:
+                out = eqn.primitive.bind(*invals, **eqn.params)
+                outvals = list(out) if eqn.primitive.multiple_results \
+                    else [out]
+            for var, val in zip(eqn.outvars, outvals):
+                write(var, val)
+        return [read(v) for v in jaxpr.outvars]
+
+    def _closed_or_open(self, jx, invals):
+        if isinstance(jx, core.ClosedJaxpr):
+            return self.eval_closed(jx, invals)
+        return self.eval(jx, (), invals)
+
+    # ---------------------------------------------------------- handlers
+    def _dot(self, eqn, invals):
+        from repro.kernels import ops as kernel_ops
+        a, b = invals
+        # No preferred type -> accumulate in at least f32, but never narrow
+        # f64 inputs (x64 mode) down to f32.
+        accum = eqn.params.get("preferred_element_type") \
+            or jnp.promote_types(a.dtype, jnp.float32)
+        out = kernel_ops.sma_gemm(a, b, backend=self.backend,
+                                  interpret=self.interpret,
+                                  accum_dtype=jnp.dtype(accum))
+        out_aval = eqn.outvars[0].aval
+        if out.dtype != out_aval.dtype:
+            out = out.astype(out_aval.dtype)
+        return out
+
+    def _scan(self, eqn, invals):
+        p = eqn.params
+        body = p["jaxpr"]
+        nc, nk = p["num_consts"], p["num_carry"]
+        consts = tuple(invals[:nc])
+        init = tuple(invals[nc:nc + nk])
+        xs = tuple(invals[nc + nk:])
+
+        def body_fn(carry, x):
+            outs = self.eval_closed(body, (*consts, *carry, *x))
+            return tuple(outs[:nk]), tuple(outs[nk:])
+
+        carry, ys = jax.lax.scan(body_fn, init, xs, length=p["length"],
+                                 reverse=p["reverse"], unroll=p["unroll"])
+        return [*carry, *ys]
+
+    def _while(self, eqn, invals):
+        p = eqn.params
+        n_cc, n_bc = p["cond_nconsts"], p["body_nconsts"]
+        cond_consts = tuple(invals[:n_cc])
+        body_consts = tuple(invals[n_cc:n_cc + n_bc])
+        init = tuple(invals[n_cc + n_bc:])
+
+        def cond_fn(carry):
+            return self.eval_closed(p["cond_jaxpr"],
+                                    (*cond_consts, *carry))[0]
+
+        def body_fn(carry):
+            return tuple(self.eval_closed(p["body_jaxpr"],
+                                          (*body_consts, *carry)))
+
+        return list(jax.lax.while_loop(cond_fn, body_fn, init))
+
+    def _cond(self, eqn, invals):
+        index, *operands = invals
+        branches = [functools.partial(
+            lambda br, *a: tuple(self.eval_closed(br, a)), br)
+            for br in eqn.params["branches"]]
+        return list(jax.lax.switch(index, branches, *operands))
+
+
+# --------------------------------------------------------------------------
+# compile_model: the front door
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class CompiledModel:
+    """Plan + executable returned by :func:`compile_model`.
+
+    Calling it with the same pytree structure as the example arguments runs
+    the planned program with systolic groups dispatched to the SMA kernels.
+    """
+
+    traced: TracedModel
+    plan: ModelPlan
+    report: Dict[str, Any]
+    _runner: Callable
+
+    @property
+    def name(self) -> str:
+        return self.traced.name
+
+    @property
+    def summary(self):
+        return self.plan.summary
+
+    def __call__(self, *args, **kwargs):
+        flat, in_tree = jax.tree_util.tree_flatten((args, kwargs))
+        if in_tree != self.traced.in_tree:
+            raise TypeError(
+                f"compiled model '{self.name}' called with argument "
+                f"structure {in_tree}; compiled for {self.traced.in_tree}")
+        outs = self._runner(*flat)
+        return jax.tree_util.tree_unflatten(self.traced.out_tree, outs)
+
+
+def compile_model(fn: Callable, *args, name: Optional[str] = None,
+                  policy: Optional[SMAPolicy] = None,
+                  backend: Optional[str] = None, interpret: bool = False,
+                  max_scan_unroll: int = 8, jit: bool = False,
+                  **kwargs) -> CompiledModel:
+    """Trace → lower → plan → wrap a dispatching executable.
+
+    Parameters mirror the framework-wide kernel contract: ``backend`` is one
+    of ``None`` (auto: pallas on TPU, xla elsewhere), ``"pallas"``,
+    ``"interpret"``, ``"xla"``; ``interpret=True`` forces the Pallas
+    interpreter (CPU kernel-logic validation).  ``args``/``kwargs`` may be
+    real arrays or ``jax.ShapeDtypeStruct`` placeholders; execution of the
+    returned callable of course needs real arrays.
+    """
+    traced = trace_model(fn, *args, name=name, **kwargs)
+    program = lower_jaxpr(traced.closed_jaxpr,
+                          max_scan_unroll=max_scan_unroll)
+    plan = plan_program(program, name=traced.name, policy=policy)
+
+    interp = _Interpreter(backend, interpret)
+
+    def runner(*flat):
+        return interp.eval_closed(traced.closed_jaxpr, flat)
+
+    if jit:
+        runner = jax.jit(runner)
+
+    report = plan_report(plan)
+    report["dispatch"] = {
+        "backend": backend or "auto",
+        "interpret": interpret,
+        **count_dispatch_sites(traced.jaxpr),
+    }
+    return CompiledModel(traced=traced, plan=plan, report=report,
+                         _runner=runner)

@@ -1,0 +1,89 @@
+"""Stage 5 — report: machine-readable plan summaries.
+
+``plan_report`` renders a :class:`repro.compiler.fuse.ModelPlan` into a
+plain-JSON dict: group counts, temporal mode switches, fused SIMD epilogues,
+HBM bytes avoided by VMEM residency, systolic FLOP share, per-kind FLOP
+histograms, and the largest fusion groups.  ``benchmarks/run.py
+--compile-report`` emits one such report per model family.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict
+
+from repro.compiler.fuse import ModelPlan
+from repro.core.modes import ExecMode
+
+
+def plan_report(plan: ModelPlan, *, top_groups: int = 5) -> Dict[str, Any]:
+    """JSON-safe report for one planned model."""
+    summary = plan.summary
+    hist = plan.mode_flop_histogram
+    kind_flops: Dict[str, float] = {}
+    kind_counts: Dict[str, int] = {}
+    for op in plan.ops:
+        kind_flops[op.kind.value] = kind_flops.get(op.kind.value, 0.0) \
+            + op.flops
+        kind_counts[op.kind.value] = kind_counts.get(op.kind.value, 0) + 1
+
+    ranked = sorted(plan.groups,
+                    key=lambda g: sum(op.flops for op in g.ops),
+                    reverse=True)
+    groups_out = []
+    for g in ranked[:top_groups]:
+        groups_out.append({
+            "mode": g.mode.value,
+            "anchor": g.anchor.name if g.anchor is not None else None,
+            "ops": len(g.ops),
+            "fused_simd_ops": g.fused_simd_ops,
+            "flops": sum(op.flops for op in g.ops),
+            "bytes_kept_in_vmem": g.bytes_kept_in_vmem,
+        })
+
+    return {
+        "model": plan.name,
+        "num_ops": len(plan.ops),
+        "groups": summary.groups,
+        "systolic_groups": len(plan.systolic_groups),
+        "simd_groups": len(plan.simd_groups),
+        "mode_switches": summary.mode_switches,
+        "fused_simd_ops": summary.fused_simd_ops,
+        "hbm_bytes_avoided": summary.hbm_bytes_avoided,
+        "systolic_flop_share": summary.systolic_flop_share,
+        "total_flops": plan.total_flops,
+        "mode_flop_histogram": {m.value: hist[m] for m in ExecMode},
+        "opkind_flops": kind_flops,
+        "opkind_counts": kind_counts,
+        "largest_groups": groups_out,
+        "lowering": dataclasses.asdict(plan.stats),
+    }
+
+
+def render_text(report: Dict[str, Any]) -> str:
+    """One-screen human rendering of a plan report."""
+    lines = [
+        f"model: {report['model']}",
+        f"  ops {report['num_ops']} -> groups {report['groups']} "
+        f"(systolic {report['systolic_groups']}, simd "
+        f"{report['simd_groups']})",
+        f"  temporal mode switches : {report['mode_switches']}",
+        f"  fused SIMD epilogues   : {report['fused_simd_ops']}",
+        f"  HBM bytes avoided      : "
+        f"{report['hbm_bytes_avoided'] / 1e6:.2f} MB",
+        f"  systolic FLOP share    : "
+        f"{report['systolic_flop_share']:.1%}",
+    ]
+    disp = report.get("dispatch")
+    if disp:
+        lines.append(
+            f"  dispatch               : "
+            f"{disp['systolic_dispatch_sites']} GEMM sites -> sma_gemm "
+            f"({disp['backend']}), {disp['native_dot_sites']} native")
+    return "\n".join(lines)
+
+
+def write_report(report: Dict[str, Any], path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")

@@ -15,6 +15,11 @@ The runtime half, :func:`sma_matmul`, is the ``LSMA`` analogue: a single entry
 point that runs a GEMM in systolic mode with an optional fused SIMD epilogue,
 dispatching to the Pallas kernel on TPU (or in interpret mode) and to a pure
 jnp path under XLA elsewhere (the dry-run path).
+
+Plans need not be hand-written: :mod:`repro.compiler` lowers any traced JAX
+program to the :class:`~repro.core.modes.Op` IR and feeds it through
+:class:`SMAPolicy`, making this planner the execution front-end for the real
+models in :mod:`repro.models` (see ``compiler.compile_model``).
 """
 from __future__ import annotations
 

@@ -1,0 +1,10 @@
+"""Version shims for Pallas-TPU APIs across supported JAX releases.
+
+``jax.experimental.pallas.tpu`` renamed ``TPUCompilerParams`` to
+``CompilerParams``; resolve whichever this JAX provides so the kernels
+import one stable name.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

@@ -13,6 +13,12 @@ Dispatch policy (the framework-wide contract):
 
 Every entry point takes the same arguments in every backend, so models are
 written once against this module.
+
+:mod:`repro.compiler` targets this contract from the other direction: its
+dispatcher executes traced jaxprs and routes every SYSTOLIC-anchored GEMM
+(the ``(..., K) @ (K, N)`` LSMA macro-op shape) through :func:`sma_gemm`
+with the same ``backend``/``interpret`` knobs, so compiled models and
+hand-written models share one dispatch policy.
 """
 from __future__ import annotations
 

@@ -37,6 +37,15 @@ from repro.launch.common import build_cell
 from repro.launch.mesh import make_production_mesh
 from repro.models.layers import Runtime
 
+
+def _cost_dict(compiled) -> Dict[str, float]:
+    """Normalize Compiled.cost_analysis() across JAX versions (list/dict)."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "results", "dryrun")
 
@@ -116,7 +125,7 @@ def _probe(cfg, shape, mesh, n_groups: int, *, sequence_parallel: bool,
                           sequence_parallel=sequence_parallel, remat=remat)
     with mesh:
         compiled = fn.lower(*args).compile()
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled)
     coll = rl.collective_bytes_from_hlo(compiled.as_text())
     return {
         "flops": float(cost.get("flops", 0.0)),
@@ -178,7 +187,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
     compile_s = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled)
     hlo = compiled.as_text()
     coll = rl.collective_bytes_from_hlo(hlo)
     bytes_per_device = (

@@ -34,10 +34,12 @@ class TestRules:
     def _mesh(self, multi=False):
         # rules_for only reads axis names/sizes — safe on one device via
         # an abstract mesh.
-        import numpy as np
         shape = (2, 16, 16) if multi else (16, 16)
         names = ("pod", "data", "model") if multi else ("data", "model")
-        return jax.sharding.AbstractMesh(shape, names)
+        try:
+            return jax.sharding.AbstractMesh(shape, names)
+        except TypeError:  # jax<=0.4.x: takes ((name, size), ...) pairs
+            return jax.sharding.AbstractMesh(tuple(zip(names, shape)))
 
     def test_divisible_heads_get_tp(self):
         cfg = C.get_config("stablelm-1.6b")  # 32 heads
@@ -141,6 +143,8 @@ def test_dryrun_machinery_small_mesh():
         with mesh:
             compiled = fn.lower(*args).compile()
         cost = compiled.cost_analysis()
+        if isinstance(cost, list):  # jax<=0.4.x returns [dict]
+            cost = cost[0]
         coll = rl.collective_bytes_from_hlo(compiled.as_text())
         assert cost.get('flops', 0) > 0
         assert coll['total'] > 0, coll

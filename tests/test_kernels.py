@@ -8,7 +8,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # hypothesis is optional: property-based cases skip without it
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover
+    given = settings = st = None
 
 from repro.kernels import ops, ref
 from repro.kernels.decode_attention import decode_attention
@@ -56,16 +60,20 @@ def test_sma_gemm_batched_leading_dims():
     assert_close(got, ref.gemm_ref(a, b), jnp.float32)
 
 
-@settings(max_examples=12, deadline=None)
-@given(m=st.integers(1, 96), k=st.integers(1, 96), n=st.integers(1, 96),
-       ep=st.sampled_from(["none", "relu", "gelu", "silu", "tanh"]))
-def test_sma_gemm_property(m, k, n, ep):
-    """Property: kernel == oracle for arbitrary small shapes + epilogues."""
-    a = jax.random.normal(jax.random.PRNGKey(m * 997 + k), (m, k))
-    b = jax.random.normal(jax.random.PRNGKey(n), (k, n))
-    got = sma_gemm(a, b, epilogue=ep, interpret=True,
-                   block_m=32, block_n=32, block_k=32)
-    assert_close(got, ref.gemm_ref(a, b, epilogue=ep), jnp.float32)
+if st is not None:
+    @settings(max_examples=12, deadline=None)
+    @given(m=st.integers(1, 96), k=st.integers(1, 96), n=st.integers(1, 96),
+           ep=st.sampled_from(["none", "relu", "gelu", "silu", "tanh"]))
+    def test_sma_gemm_property(m, k, n, ep):
+        """Property: kernel == oracle for arbitrary small shapes+epilogues."""
+        a = jax.random.normal(jax.random.PRNGKey(m * 997 + k), (m, k))
+        b = jax.random.normal(jax.random.PRNGKey(n), (k, n))
+        got = sma_gemm(a, b, epilogue=ep, interpret=True,
+                       block_m=32, block_n=32, block_k=32)
+        assert_close(got, ref.gemm_ref(a, b, epilogue=ep), jnp.float32)
+else:
+    def test_sma_gemm_property():
+        pytest.importorskip("hypothesis")
 
 
 # ---------------------------------------------------- flash_attention
@@ -179,19 +187,23 @@ def test_mlstm_xla_chunkwise_matches_sequential():
     assert_close(got, ref.mlstm_ref(q, k, v, lf, li), jnp.float32)
 
 
-@settings(max_examples=8, deadline=None)
-@given(s=st.integers(2, 80), chunk=st.sampled_from([8, 16, 32]))
-def test_mlstm_chunk_invariance(s, chunk):
-    """Property: output independent of chunk size (state handoff is exact)."""
-    ks = jax.random.split(jax.random.PRNGKey(s), 5)
-    q = jax.random.normal(ks[0], (1, 1, s, 16))
-    k = jax.random.normal(ks[1], (1, 1, s, 16))
-    v = jax.random.normal(ks[2], (1, 1, s, 16))
-    lf = jax.nn.log_sigmoid(jax.random.normal(ks[3], (1, 1, s)) + 1.0)
-    li = jax.random.normal(ks[4], (1, 1, s)) * 0.5
-    a = ops._mlstm_chunkwise_xla(q, k, v, lf, li, chunk=chunk)
-    b = ref.mlstm_ref(q, k, v, lf, li)
-    assert_close(a, b, jnp.float32)
+if st is not None:
+    @settings(max_examples=8, deadline=None)
+    @given(s=st.integers(2, 80), chunk=st.sampled_from([8, 16, 32]))
+    def test_mlstm_chunk_invariance(s, chunk):
+        """Property: output independent of chunk size (exact handoff)."""
+        ks = jax.random.split(jax.random.PRNGKey(s), 5)
+        q = jax.random.normal(ks[0], (1, 1, s, 16))
+        k = jax.random.normal(ks[1], (1, 1, s, 16))
+        v = jax.random.normal(ks[2], (1, 1, s, 16))
+        lf = jax.nn.log_sigmoid(jax.random.normal(ks[3], (1, 1, s)) + 1.0)
+        li = jax.random.normal(ks[4], (1, 1, s)) * 0.5
+        a = ops._mlstm_chunkwise_xla(q, k, v, lf, li, chunk=chunk)
+        b = ref.mlstm_ref(q, k, v, lf, li)
+        assert_close(a, b, jnp.float32)
+else:
+    def test_mlstm_chunk_invariance():
+        pytest.importorskip("hypothesis")
 
 
 # ---------------------------------------------------- rmsnorm_gemm (prologue)
