@@ -9,6 +9,7 @@ multi-mode kernels avoid vs a spatially-decoupled schedule.
 """
 from __future__ import annotations
 
+import functools
 import time
 from typing import List, Tuple
 
@@ -86,6 +87,70 @@ def mlstm_paths() -> List[Row]:
     ]
 
 
+def _time_latency(fn, *args, iters: int) -> float:
+    """Per-call latency in us: block on every call (no cross-iteration
+    pipelining — the mode-switch latency is exactly what we measure)."""
+    jax.block_until_ready(fn(*args))  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def gemm_chain_paths() -> List[Row]:
+    """Fused vs unfused bias+gelu GEMM chains (decode-step MLP
+    up-projections) at LM shapes, XLA path.
+
+    The unfused baseline is the spatially-decoupled schedule: GEMM, bias
+    add and activation as three separately-dispatched kernels, each stage
+    *synchronized* on its predecessor's materialized output — the separate
+    SIMD kernel cannot start until the systolic kernel's HBM write
+    completes, which is precisely the round-trip the paper's temporal
+    integration removes.  The fused row is one ``ops.sma_gemm(bias=…,
+    epilogue=…)`` call — what the compiler's fusion-rewrite pass dispatches
+    for every matched chain.
+
+    Shapes are decode-step MLP GEMMs (M = a few in-flight tokens), where
+    the mode-switch overhead is the largest *relative* cost — the paper's
+    own motivation for LSMA's fused epilogue.  Timing is interleaved
+    min-of-blocks so shared-host load drift hits both paths equally.
+    """
+    rows: List[Row] = []
+    # (M=in-flight tokens, K=d_model, N=d_ff)
+    shapes = [(8, 512, 2048), (8, 1024, 4096)]
+    dot = jax.jit(lambda x, w: x @ w)
+    addb = jax.jit(lambda y, b: y + b)
+    act = jax.jit(lambda y: jax.nn.gelu(y, approximate=True))
+    fused = jax.jit(functools.partial(ops.sma_gemm, epilogue="gelu",
+                                      backend="xla"))
+    for m, k, n in shapes:
+        key = jax.random.PRNGKey(42)
+        x = jax.random.normal(key, (m, k), jnp.float32)
+        w = jax.random.normal(key, (k, n), jnp.float32) * k ** -0.5
+        b = jax.random.normal(key, (n,), jnp.float32)
+
+        def unfused(x, w, b):
+            y = jax.block_until_ready(dot(x, w))   # systolic -> HBM
+            y = jax.block_until_ready(addb(y, b))  # SIMD reads it back
+            return act(y)
+
+        def fused_call(x, w, b):
+            return fused(x, w, bias=b)
+
+        iters = max(10, min(60, 20480 // max(n // 64, 1)))
+        t_unf, t_fus = float("inf"), float("inf")
+        for _ in range(12):
+            t_unf = min(t_unf, _time_latency(unfused, x, w, b, iters=iters))
+            t_fus = min(t_fus, _time_latency(fused_call, x, w, b,
+                                             iters=iters))
+        tag = f"m{m}k{k}n{n}"
+        rows += [
+            (f"chain.mlp_bias_gelu.{tag}.unfused", t_unf, 1.0),
+            (f"chain.mlp_bias_gelu.{tag}.fused", t_fus, t_unf / t_fus),
+        ]
+    return rows
+
+
 def fusion_accounting() -> List[Row]:
     """SMA temporal-fusion savings on one LM block (HBM bytes avoided)."""
     b, s, d, ff, h = 16, 4096, 4096, 14336, 32
@@ -121,10 +186,20 @@ def fusion_accounting() -> List[Row]:
     ]
 
 
+def smoke_rows() -> List[Row]:
+    """The cheap regression set: fused-vs-unfused chains + symbolic fusion
+    accounting.  This is what CI records to ``BENCH_kernels.json``."""
+    rows: List[Row] = []
+    rows += gemm_chain_paths()
+    rows += fusion_accounting()
+    return rows
+
+
 def all_rows() -> List[Row]:
     rows: List[Row] = []
     rows += attention_paths()
     rows += rglru_paths()
     rows += mlstm_paths()
+    rows += gemm_chain_paths()
     rows += fusion_accounting()
     return rows

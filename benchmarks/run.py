@@ -1,20 +1,93 @@
 """Benchmark harness: one function per paper table/figure + kernel/roofline
 rows.  Prints ``name,us_per_call,derived`` CSV, then the claims scoreboard.
+
+``--bench-json [PATH]`` runs the kernel-bench smoke set (fused-vs-unfused
+GEMM chains + fusion accounting) and writes it as JSON — by default
+``BENCH_kernels.json`` at the repo root, the perf baseline future PRs
+regress against.  ``--bench-full`` includes the heavier attention / rglru /
+mlstm rows in the JSON as well.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 
 # Support both `python -m benchmarks.run` and `python benchmarks/run.py`.
-sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _REPO_ROOT)
+
+
+def check_chain_rows(rows, *, slack: float = 1.25) -> int:
+    """Enforce the fusion acceptance bar: every ``.fused`` chain row must be
+    no slower than its ``.unfused`` counterpart times ``slack``.
+
+    The slack is deliberately coarse: shared CI runners jitter by tens of
+    percent, while a genuine fusion regression (an extra materialization or
+    dispatch on the fused path) erases the whole fused margin and then
+    some — this is a tripwire for the pathological case, not a
+    high-resolution perf gate.  Returns the number of violations."""
+    by_name = {name: us for name, us, _ in rows}
+    bad = 0
+    for name, us in sorted(by_name.items()):
+        if not name.endswith(".fused"):
+            continue
+        base = by_name.get(name[:-len(".fused")] + ".unfused")
+        if base is None:
+            continue
+        ok = us <= base * slack
+        print(f"# check {name}: fused {us:.1f}us vs unfused {base:.1f}us "
+              f"-> {'ok' if ok else 'REGRESSION'}")
+        bad += 0 if ok else 1
+    return bad
+
+
+def write_bench_json(path: str, *, full: bool = False,
+                     check: bool = False) -> None:
+    """Run the kernel benches and write ``{schema, meta, rows}`` JSON."""
+    import jax
+
+    from benchmarks import kernel_bench
+
+    rows = kernel_bench.all_rows() if full else kernel_bench.smoke_rows()
+    payload = {
+        "schema": 1,
+        "meta": {
+            "jax_version": jax.__version__,
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "suite": "full" if full else "smoke",
+        },
+        "rows": [{"name": name, "us_per_call": us, "derived": derived}
+                 for name, us, derived in rows],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived:.4f}")
+    print(f"# wrote {len(rows)} rows -> {path}")
+    if check and check_chain_rows(rows):
+        raise SystemExit("fused chain slower than unfused baseline")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-kernels", action="store_true",
                     help="skip wall-clock kernel benches (CPU-heavy)")
+    ap.add_argument("--bench-json", nargs="?", const=os.path.join(
+                        _REPO_ROOT, "BENCH_kernels.json"),
+                    default=None, metavar="PATH",
+                    help="run the kernel-bench smoke set and write it as "
+                         "JSON (default path: BENCH_kernels.json at the "
+                         "repo root)")
+    ap.add_argument("--bench-full", action="store_true",
+                    help="with --bench-json: include the heavy kernel rows")
+    ap.add_argument("--bench-check", action="store_true",
+                    help="with --bench-json: fail (exit 1) if any fused "
+                         "chain row is slower than its unfused baseline")
     ap.add_argument("--compile-report", action="store_true",
                     help="emit one jaxpr->SMA plan report (JSON) per model "
                          "family instead of running benchmarks")
@@ -27,6 +100,11 @@ def main() -> None:
                     help="trace reduced (smoke) configs instead of full "
                          "scale")
     args, _ = ap.parse_known_args()
+
+    if args.bench_json:
+        write_bench_json(args.bench_json, full=args.bench_full,
+                         check=args.bench_check)
+        return
 
     if args.compile_report:
         from benchmarks import compile_report

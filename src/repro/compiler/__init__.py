@@ -10,11 +10,19 @@ op lists into the framework's actual execution front-end:
    :mod:`repro.core.modes` with FLOP/byte costs inferred from avals;
 3. :mod:`fuse`     — :class:`repro.core.sma.SMAPolicy` plans temporal mode
    assignment and fusion groups over the lowered program;
-4. :mod:`dispatch` — a jaxpr interpreter executes the program, routing every
-   SYSTOLIC-anchored GEMM through :func:`repro.kernels.ops.sma_gemm`
-   (pallas / interpret / xla backends per the framework contract);
-5. :mod:`report`   — machine-readable plan summaries (mode switches, fused
-   epilogues, HBM bytes avoided, systolic FLOP share).
+4. :mod:`rewrite`  — the fusion-rewrite pass collapses matched
+   ``dot → bias-add → activation`` epilogue chains and ``rmsnorm → dot``
+   prologue chains into single :class:`FusedGemm` pseudo-equations, with
+   conservative fallbacks (multi-consumer intermediates, jaxpr-crossing
+   values, unfusable dtypes);
+5. :mod:`dispatch` — a plan-driven jaxpr interpreter executes the rewritten
+   program: fused sites call :func:`repro.kernels.ops.sma_gemm` with
+   ``bias=``/``epilogue=`` (or ``rmsnorm_gemm``), remaining SYSTOLIC GEMMs
+   dispatch bare (pallas / interpret / xla backends per the framework
+   contract);
+6. :mod:`report`   — machine-readable plan summaries (mode switches, fused
+   epilogues, HBM bytes avoided, systolic FLOP share) reconciling *planned*
+   vs *realized* fusion.
 
 Front door::
 
@@ -28,7 +36,10 @@ from repro.compiler.dispatch import (CompiledModel, compile_model,
 from repro.compiler.fuse import ModelPlan, plan_program
 from repro.compiler.lower import (LoweredProgram, LowerStats,
                                   dot_general_cost, lower_jaxpr)
-from repro.compiler.report import plan_report, render_text, write_report
+from repro.compiler.report import (fusion_section, plan_report, render_text,
+                                   write_report)
+from repro.compiler.rewrite import (FusedGemm, RewriteResult, RewriteStats,
+                                    rewrite_program)
 from repro.compiler.trace import TracedModel, trace_model
 
 __all__ = [
@@ -42,9 +53,14 @@ __all__ = [
     "LowerStats",
     "dot_general_cost",
     "lower_jaxpr",
+    "fusion_section",
     "plan_report",
     "render_text",
     "write_report",
+    "FusedGemm",
+    "RewriteResult",
+    "RewriteStats",
+    "rewrite_program",
     "TracedModel",
     "trace_model",
 ]

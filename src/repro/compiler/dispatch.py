@@ -1,20 +1,27 @@
 """Stage 4 — dispatch: execute the traced program, routing SYSTOLIC-anchored
 GEMMs through the fused SMA kernel entry points.
 
-The dispatcher is a jaxpr interpreter.  Most equations re-bind their
-primitive unchanged; the exceptions implement the SMA execution contract:
+The dispatcher is a plan-driven jaxpr interpreter: it walks the item stream
+produced by the fusion-rewrite pass (:mod:`repro.compiler.rewrite`) — jaxpr
+equations interleaved with :class:`~repro.compiler.rewrite.FusedGemm`
+pseudo-equations.  Most equations re-bind their primitive unchanged; the
+exceptions implement the SMA execution contract:
 
-* every ``dot_general`` of the LSMA-eligible shape — single contracting
-  dimension, no batch dimensions, 2-D stationary operand — is the anchor of
-  a SYSTOLIC fusion group in the plan (``MODE_OF[MATMUL] is SYSTOLIC``), and
-  is executed through :func:`repro.kernels.ops.sma_gemm`, which dispatches
+* every matched fusion chain — ``dot → bias-add → activation`` epilogues and
+  ``rmsnorm → dot`` prologues — executes as ONE call to the fused entry
+  points (:func:`repro.kernels.ops.sma_gemm` with ``bias=``/``epilogue=``,
+  :func:`repro.kernels.ops.rmsnorm_gemm`), realizing the planner's
+  temporal-mode fusion: the intermediate never round-trips HBM;
+* every remaining ``dot_general`` of the LSMA-eligible shape — single
+  contracting dimension, no batch dimensions, 2-D stationary operand — is
+  executed bare through :func:`repro.kernels.ops.sma_gemm`, which dispatches
   per the framework backend contract (``pallas`` on TPU, ``interpret`` for
   kernel-logic tests on CPU, ``xla`` for dry-runs);
 * batched contractions (attention q@k^T / p@v) and everything SIMD-mode
   re-bind natively — on TPU those are exactly the ops XLA places on the VPU;
 * higher-order primitives (``scan``/``while``/``cond``/``pjit``/custom-vjp
-  wrappers) are re-built around recursively interpreted bodies, so GEMMs
-  *inside* layer-group scans dispatch too.
+  wrappers) are re-built around recursively interpreted bodies, so GEMM
+  chains *inside* layer-group scans fuse and dispatch too.
 
 Because every handler is jax-traceable, the interpreted callable can itself
 be ``jax.jit``-ed (``compile_model(..., jit=True)``).
@@ -31,7 +38,8 @@ from jax import core
 
 from repro.compiler.fuse import ModelPlan, plan_program
 from repro.compiler.lower import lower_jaxpr
-from repro.compiler.report import plan_report
+from repro.compiler.report import fusion_section, plan_report
+from repro.compiler.rewrite import FusedGemm, RewriteResult, rewrite_program
 from repro.compiler.trace import TracedModel, subjaxprs, trace_model
 from repro.core.sma import SMAPolicy
 
@@ -80,9 +88,11 @@ def count_dispatch_sites(jaxpr: core.Jaxpr) -> Dict[str, int]:
 # The interpreter
 # --------------------------------------------------------------------------
 class _Interpreter:
-    def __init__(self, backend: Optional[str], interpret: bool) -> None:
+    def __init__(self, backend: Optional[str], interpret: bool,
+                 rewrite: Optional[RewriteResult] = None) -> None:
         self.backend = backend
         self.interpret = interpret
+        self.rewrite = rewrite
 
     # -------------------------------------------------------------- eval
     def eval_closed(self, closed: core.ClosedJaxpr, args) -> List[Any]:
@@ -102,7 +112,13 @@ class _Interpreter:
         for var, val in zip(jaxpr.invars, args):
             write(var, val)
 
-        for eqn in jaxpr.eqns:
+        items = self.rewrite.items_for(jaxpr) if self.rewrite is not None \
+            else jaxpr.eqns
+        for eqn in items:
+            if isinstance(eqn, FusedGemm):
+                write(eqn.outvar,
+                      self._fused(eqn, [read(v) for v in eqn.invars]))
+                continue
             invals = [read(v) for v in eqn.invars]
             prim = eqn.primitive.name
             if prim == "dot_general" and sma_eligible(eqn):
@@ -148,10 +164,33 @@ class _Interpreter:
             or jnp.promote_types(a.dtype, jnp.float32)
         out = kernel_ops.sma_gemm(a, b, backend=self.backend,
                                   interpret=self.interpret,
-                                  accum_dtype=jnp.dtype(accum))
+                                  accum_dtype=jnp.dtype(accum),
+                                  precision=eqn.params.get("precision"))
         out_aval = eqn.outvars[0].aval
         if out.dtype != out_aval.dtype:
             out = out.astype(out_aval.dtype)
+        return out
+
+    def _fused(self, fg: FusedGemm, invals):
+        from repro.kernels import ops as kernel_ops
+        if fg.kind == "prologue":
+            x, scale, w = invals
+            out = kernel_ops.rmsnorm_gemm(x, scale, w, epilogue=fg.epilogue,
+                                          eps=fg.eps, backend=self.backend,
+                                          interpret=self.interpret,
+                                          precision=fg.precision)
+        else:
+            a, b = invals[:2]
+            bias = invals[2] if fg.has_bias else None
+            accum = fg.preferred_element_type \
+                or jnp.promote_types(a.dtype, jnp.float32)
+            out = kernel_ops.sma_gemm(a, b, bias=bias, epilogue=fg.epilogue,
+                                      backend=self.backend,
+                                      interpret=self.interpret,
+                                      accum_dtype=jnp.dtype(accum),
+                                      precision=fg.precision)
+        if out.dtype != fg.out_aval.dtype:
+            out = out.astype(fg.out_aval.dtype)
         return out
 
     def _scan(self, eqn, invals):
@@ -210,6 +249,7 @@ class CompiledModel:
     plan: ModelPlan
     report: Dict[str, Any]
     _runner: Callable
+    rewritten: Optional[RewriteResult] = None
 
     @property
     def name(self) -> str:
@@ -218,6 +258,14 @@ class CompiledModel:
     @property
     def summary(self):
         return self.plan.summary
+
+    @property
+    def fused_sites(self) -> List[FusedGemm]:
+        """Every realized fusion site across the program tree."""
+        if self.rewritten is None:
+            return []
+        return [it for it in self.rewritten.all_items()
+                if isinstance(it, FusedGemm)]
 
     def __call__(self, *args, **kwargs):
         flat, in_tree = jax.tree_util.tree_flatten((args, kwargs))
@@ -233,8 +281,9 @@ def compile_model(fn: Callable, *args, name: Optional[str] = None,
                   policy: Optional[SMAPolicy] = None,
                   backend: Optional[str] = None, interpret: bool = False,
                   max_scan_unroll: int = 8, jit: bool = False,
+                  fuse_runtime: bool = True,
                   **kwargs) -> CompiledModel:
-    """Trace → lower → plan → wrap a dispatching executable.
+    """Trace → lower → plan → rewrite → wrap a dispatching executable.
 
     Parameters mirror the framework-wide kernel contract: ``backend`` is one
     of ``None`` (auto: pallas on TPU, xla elsewhere), ``"pallas"``,
@@ -242,13 +291,17 @@ def compile_model(fn: Callable, *args, name: Optional[str] = None,
     interpreter (CPU kernel-logic validation).  ``args``/``kwargs`` may be
     real arrays or ``jax.ShapeDtypeStruct`` placeholders; execution of the
     returned callable of course needs real arrays.
+
+    ``fuse_runtime=False`` disables the fusion-rewrite pass (every GEMM
+    dispatches bare) — the spatially-decoupled baseline for A/B timing.
     """
     traced = trace_model(fn, *args, name=name, **kwargs)
     program = lower_jaxpr(traced.closed_jaxpr,
                           max_scan_unroll=max_scan_unroll)
     plan = plan_program(program, name=traced.name, policy=policy)
+    rewritten = rewrite_program(traced.jaxpr) if fuse_runtime else None
 
-    interp = _Interpreter(backend, interpret)
+    interp = _Interpreter(backend, interpret, rewritten)
 
     def runner(*flat):
         return interp.eval_closed(traced.closed_jaxpr, flat)
@@ -262,5 +315,6 @@ def compile_model(fn: Callable, *args, name: Optional[str] = None,
         "interpret": interpret,
         **count_dispatch_sites(traced.jaxpr),
     }
+    report["fusion"] = fusion_section(plan, rewritten)
     return CompiledModel(traced=traced, plan=plan, report=report,
-                         _runner=runner)
+                         _runner=runner, rewritten=rewritten)

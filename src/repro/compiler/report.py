@@ -3,14 +3,18 @@
 ``plan_report`` renders a :class:`repro.compiler.fuse.ModelPlan` into a
 plain-JSON dict: group counts, temporal mode switches, fused SIMD epilogues,
 HBM bytes avoided by VMEM residency, systolic FLOP share, per-kind FLOP
-histograms, and the largest fusion groups.  ``benchmarks/run.py
---compile-report`` emits one such report per model family.
+histograms, and the largest fusion groups.  ``fusion_section`` reconciles
+what the planner *promised* with what the rewrite pass *realized* — fused
+sites, realized HBM bytes avoided, and per-reason fallback counts — so the
+report never over-claims savings the runtime doesn't deliver.
+``benchmarks/run.py --compile-report`` emits one such report per model
+family.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 from repro.compiler.fuse import ModelPlan
 from repro.core.modes import ExecMode
@@ -60,6 +64,44 @@ def plan_report(plan: ModelPlan, *, top_groups: int = 5) -> Dict[str, Any]:
     }
 
 
+def fusion_section(plan: ModelPlan, rewritten: Optional[Any] = None,
+                   *, max_sites: int = 20) -> Dict[str, Any]:
+    """Planned-vs-realized fusion accounting for one compiled model.
+
+    ``planned_*`` comes from the symbolic :class:`SMAPolicy` plan;
+    ``realized_*`` from the rewrite pass that the dispatcher actually
+    executes.  ``rewritten=None`` (``fuse_runtime=False``) reports zero
+    realized sites — the honest number for bare dispatch.
+    """
+    summary = plan.summary
+    planned_sites = sum(1 for g in plan.systolic_groups
+                        if g.fused_simd_ops > 0)
+    out: Dict[str, Any] = {
+        "planned_fused_sites": planned_sites,
+        "planned_fused_simd_ops": summary.fused_simd_ops,
+        "planned_hbm_bytes_avoided": summary.hbm_bytes_avoided,
+        "realized_fused_sites": 0,
+        "realized_epilogue_sites": 0,
+        "realized_prologue_sites": 0,
+        "realized_hbm_bytes_avoided": 0.0,
+        "eqns_elided": 0,
+        "fallback_reasons": {},
+        "sites": [],
+    }
+    if rewritten is not None:
+        st = rewritten.stats
+        out.update({
+            "realized_fused_sites": st.realized_fused_sites,
+            "realized_epilogue_sites": st.realized_epilogue_sites,
+            "realized_prologue_sites": st.realized_prologue_sites,
+            "realized_hbm_bytes_avoided": st.realized_hbm_bytes_avoided,
+            "eqns_elided": st.eqns_elided,
+            "fallback_reasons": dict(st.fallback_reasons),
+            "sites": list(st.sites[:max_sites]),
+        })
+    return out
+
+
 def render_text(report: Dict[str, Any]) -> str:
     """One-screen human rendering of a plan report."""
     lines = [
@@ -80,6 +122,20 @@ def render_text(report: Dict[str, Any]) -> str:
             f"  dispatch               : "
             f"{disp['systolic_dispatch_sites']} GEMM sites -> sma_gemm "
             f"({disp['backend']}), {disp['native_dot_sites']} native")
+    fus = report.get("fusion")
+    if fus:
+        lines.append(
+            f"  runtime fusion         : "
+            f"{fus['realized_fused_sites']} sites realized "
+            f"({fus['realized_epilogue_sites']} epilogue, "
+            f"{fus['realized_prologue_sites']} prologue) / "
+            f"{fus['planned_fused_sites']} planned; "
+            f"{fus['realized_hbm_bytes_avoided'] / 1e6:.2f} MB "
+            f"HBM avoided (realized)")
+        if fus.get("fallback_reasons"):
+            reasons = ", ".join(f"{k}={v}" for k, v in
+                                sorted(fus["fallback_reasons"].items()))
+            lines.append(f"  fusion fallbacks       : {reasons}")
     return "\n".join(lines)
 
 

@@ -158,7 +158,10 @@ def sma_matmul(a: jax.Array, b: jax.Array, *,
                bias: Optional[jax.Array] = None,
                backend: Optional[str] = None,
                interpret: bool = False,
-               accum_dtype: jnp.dtype = jnp.float32) -> jax.Array:
+               accum_dtype: jnp.dtype = jnp.float32,
+               block_m: Optional[int] = None,
+               block_n: Optional[int] = None,
+               block_k: Optional[int] = None) -> jax.Array:
     """``C = epilogue(A @ B + bias)`` in systolic mode with a fused epilogue.
 
     The single-kernel fusion (GEMM + bias + activation) is the SMA temporal
@@ -169,13 +172,20 @@ def sma_matmul(a: jax.Array, b: jax.Array, *,
     ``backend='xla'`` lowers to ``jax.lax.dot_general`` + fused elementwise —
     semantically identical, used for CPU dry-runs (XLA fuses the epilogue into
     its own GEMM loop, so the accounting stays representative).
+
+    ``block_m``/``block_n``/``block_k`` tile the kernel backends; ``None``
+    defers to the shape-aware table in :mod:`repro.kernels.autotune`, so the
+    LSMA entry point and the compiler share one tuning surface.  The XLA path
+    ignores them (XLA picks its own tiling).
     """
     backend = backend or default_backend()
     if backend == "pallas" or interpret:
         from repro.kernels import ops as kernel_ops  # defer: optional dep cycle
         return kernel_ops.sma_gemm(a, b, bias=bias, epilogue=epilogue,
-                                   interpret=interpret,
-                                   accum_dtype=accum_dtype)
+                                   backend=backend, interpret=interpret,
+                                   accum_dtype=accum_dtype,
+                                   block_m=block_m, block_n=block_n,
+                                   block_k=block_k)
     out = jax.lax.dot_general(
         a, b, (((a.ndim - 1,), (0,)), ((), ())),
         preferred_element_type=accum_dtype)

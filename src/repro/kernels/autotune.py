@@ -1,0 +1,162 @@
+"""Shape-aware block-size selection for the SMA GEMM kernels.
+
+The Pallas kernels in :mod:`repro.kernels.sma_gemm` / ``norm_gemm`` used to
+hard-code ``(256, 256, 512)`` blocks — a good default for large square-ish
+LM projections, but wasteful for decode-shaped GEMMs (M of a few dozen rows
+pads to 256) and VMEM-unsafe for wide-N f32 problems.  This module is the
+single tuning surface both the kernel entry points and the compiler's
+fused dispatch share:
+
+* :func:`heuristic_blocks` — a closed-form table keyed on ``(M, N, K,
+  dtype)``: blocks are clipped to the problem, rounded to the MXU tile /
+  VPU sublane granularity, and shrunk until the working set (double-buffered
+  A/B blocks + the f32 revolving accumulator + the output block) fits a
+  conservative VMEM budget.
+* :func:`measured_blocks` — optional measured search: times the real kernel
+  over a small candidate grid and caches the argmin per ``(M, N, K, dtype,
+  backend)``.  Used on hardware; the heuristic is the zero-cost default.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+#: MXU systolic tile edge (also the VPU lane count) — last-dim granularity.
+MXU_TILE = 128
+
+#: Default VMEM working-set budget (bytes).  Real VMEM is ~16 MB/core; half
+#: is left for Pallas's implicit double-buffering slack and the epilogue.
+VMEM_BUDGET = 8 * 2 ** 20
+
+Blocks = Tuple[int, int, int]
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-int(x) // mult) * mult
+
+
+def _sublane(dtype) -> int:
+    """Minimum second-minor tile: 8 rows for 4-byte types, 16 for 2-byte."""
+    return 16 if jnp.dtype(dtype).itemsize <= 2 else 8
+
+
+def block_footprint_bytes(bm: int, bn: int, bk: int, dtype) -> int:
+    """VMEM working set of one grid step: double-buffered A (bm, bk) and
+    B (bk, bn) input blocks, the f32 revolving accumulator, and the output
+    block."""
+    item = jnp.dtype(dtype).itemsize
+    return 2 * (bm * bk + bk * bn) * item + bm * bn * (4 + item)
+
+
+def heuristic_blocks(m: int, n: int, k: int, dtype, *,
+                     vmem_budget: int = VMEM_BUDGET) -> Blocks:
+    """Pick ``(block_m, block_n, block_k)`` for an ``(M, K) @ (K, N)`` GEMM.
+
+    Rules (in order):
+
+    * never block larger than the (padded) problem — a decode GEMM with
+      M=32 gets ``bm = 32`` rounded to the sublane tile, not 256;
+    * ``bn``/``bk`` stay multiples of the 128-wide MXU tile;
+    * 2-byte dtypes stream a deeper K (1024) per grid step — the MXU is
+      rarely the bottleneck at bf16 and a longer K-loop amortizes the
+      epilogue;
+    * shrink K, then the larger of M/N, until the double-buffered working
+      set fits the VMEM budget.
+    """
+    dtype = jnp.dtype(dtype)
+    sub = _sublane(dtype)
+    bm = min(256, _round_up(max(m, 1), sub))
+    bn = min(256, _round_up(max(n, 1), MXU_TILE))
+    base_k = 1024 if dtype.itemsize <= 2 else 512
+    bk = min(base_k, _round_up(max(k, 1), MXU_TILE))
+
+    while block_footprint_bytes(bm, bn, bk, dtype) > vmem_budget \
+            and bk > MXU_TILE:
+        bk = max(MXU_TILE, bk // 2)
+    while block_footprint_bytes(bm, bn, bk, dtype) > vmem_budget:
+        if bm >= bn and bm > sub:
+            bm = max(sub, bm // 2)
+        elif bn > MXU_TILE:
+            bn = max(MXU_TILE, bn // 2)
+        else:
+            break
+    return bm, bn, bk
+
+
+def resolve_blocks(m: int, n: int, k: int, dtype,
+                   block_m: Optional[int] = None,
+                   block_n: Optional[int] = None,
+                   block_k: Optional[int] = None) -> Blocks:
+    """Fill any unspecified block dim from the heuristic table.
+
+    Explicit caller choices always win — the autotuner only replaces the
+    old hard-coded defaults, it never overrides a hand-tuned block.
+    """
+    if block_m is not None and block_n is not None and block_k is not None:
+        return block_m, block_n, block_k
+    bm, bn, bk = heuristic_blocks(m, n, k, dtype)
+    return block_m or bm, block_n or bn, block_k or bk
+
+
+# --------------------------------------------------------------------------
+# Measured search (optional)
+# --------------------------------------------------------------------------
+_MEASURED_CACHE: Dict[Tuple, Blocks] = {}
+
+
+def candidate_blocks(m: int, n: int, k: int, dtype) -> List[Blocks]:
+    """Small candidate grid around the heuristic choice, clipped to the
+    problem so every candidate is legal."""
+    dtype = jnp.dtype(dtype)
+    sub = _sublane(dtype)
+    cands = {heuristic_blocks(m, n, k, dtype)}
+    for bm in (128, 256, 512):
+        for bn in (128, 256):
+            for bk in (256, 512):
+                cands.add((min(_round_up(max(m, 1), sub), bm),
+                           min(_round_up(max(n, 1), MXU_TILE), bn),
+                           min(_round_up(max(k, 1), MXU_TILE), bk)))
+    return sorted(c for c in cands
+                  if block_footprint_bytes(*c, dtype) <= VMEM_BUDGET)
+
+
+def measured_blocks(m: int, n: int, k: int, dtype, *,
+                    interpret: bool = False, iters: int = 3,
+                    candidates: Optional[Sequence[Blocks]] = None) -> Blocks:
+    """Time the real kernel over ``candidates`` and cache the argmin.
+
+    The measurement allocates ``(M, K)``/``(K, N)`` operands once and runs
+    each candidate ``iters`` times after a warmup call.  Results are cached
+    per ``(M, N, K, dtype, interpret)`` for the life of the process; use
+    :func:`clear_measured_cache` between environments.
+    """
+    dtype = jnp.dtype(dtype)
+    key = (int(m), int(n), int(k), dtype.name, bool(interpret))
+    if key in _MEASURED_CACHE:
+        return _MEASURED_CACHE[key]
+    from repro.kernels.sma_gemm import sma_gemm as _kernel
+    cands = list(candidates) if candidates is not None \
+        else candidate_blocks(m, n, k, dtype)
+    a = jnp.ones((m, k), dtype)
+    b = jnp.ones((k, n), dtype)
+    best, best_t = cands[0], float("inf")
+    for bm, bn, bk in cands:
+        fn = lambda: _kernel(a, b, block_m=bm, block_n=bn, block_k=bk,
+                             interpret=interpret)
+        jax.block_until_ready(fn())  # warmup/compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn()
+        jax.block_until_ready(out)
+        t = (time.perf_counter() - t0) / iters
+        if t < best_t:
+            best, best_t = (bm, bn, bk), t
+    _MEASURED_CACHE[key] = best
+    return best
+
+
+def clear_measured_cache() -> None:
+    _MEASURED_CACHE.clear()

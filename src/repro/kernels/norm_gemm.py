@@ -32,7 +32,7 @@ from repro.core.sma import EPILOGUES
 
 
 def _norm_gemm_kernel(x_ref, r_ref, g_ref, w_ref, o_ref, acc_ref, *,
-                      epilogue: str, n_k: int, out_dtype):
+                      epilogue: str, n_k: int, out_dtype, precision):
     k_idx = pl.program_id(2)
 
     @pl.when(k_idx == 0)
@@ -46,6 +46,7 @@ def _norm_gemm_kernel(x_ref, r_ref, g_ref, w_ref, o_ref, acc_ref, *,
     # -- systolic phase ------------------------------------------------------
     acc_ref[...] += jax.lax.dot_general(
         a.astype(x_ref.dtype), w_ref[...], (((1,), (0,)), ((), ())),
+        precision=precision,
         preferred_element_type=acc_ref.dtype)
 
     @pl.when(k_idx == n_k - 1)
@@ -57,14 +58,17 @@ def _norm_gemm_kernel(x_ref, r_ref, g_ref, w_ref, o_ref, acc_ref, *,
 @functools.partial(
     jax.jit,
     static_argnames=("epilogue", "eps", "block_m", "block_n", "block_k",
-                     "interpret"))
+                     "interpret", "precision"))
 def rmsnorm_gemm(x: jax.Array, scale: jax.Array, w: jax.Array, *,
                  epilogue: str = "none", eps: float = 1e-6,
-                 block_m: int = 256, block_n: int = 256, block_k: int = 512,
-                 interpret: bool = False) -> jax.Array:
+                 block_m: Optional[int] = None, block_n: Optional[int] = None,
+                 block_k: Optional[int] = None,
+                 interpret: bool = False,
+                 precision=None) -> jax.Array:
     """``epilogue(rmsnorm(x; scale) @ w)``.
 
-    x: (..., M, K); scale: (K,); w: (K, N).
+    x: (..., M, K); scale: (K,); w: (K, N).  ``block_*=None`` resolves
+    shape-aware blocks from :mod:`repro.kernels.autotune`.
     """
     orig_shape = x.shape
     k_dim = orig_shape[-1]
@@ -73,6 +77,10 @@ def rmsnorm_gemm(x: jax.Array, scale: jax.Array, w: jax.Array, *,
         m_total *= d
     x2 = x.reshape(m_total, k_dim)
     n_dim = w.shape[1]
+
+    from repro.kernels.autotune import resolve_blocks
+    block_m, block_n, block_k = resolve_blocks(
+        m_total, n_dim, k_dim, x.dtype, block_m, block_n, block_k)
 
     # row statistics (one cheap fused reduction; f32)
     r = jax.lax.rsqrt(
@@ -97,7 +105,8 @@ def rmsnorm_gemm(x: jax.Array, scale: jax.Array, w: jax.Array, *,
     grid = (mm // bm, nn // bn, kk // bk)
 
     kernel = functools.partial(_norm_gemm_kernel, epilogue=epilogue,
-                               n_k=grid[2], out_dtype=x.dtype)
+                               n_k=grid[2], out_dtype=x.dtype,
+                               precision=precision)
     out = pl.pallas_call(
         kernel,
         grid=grid,

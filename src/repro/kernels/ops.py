@@ -43,34 +43,53 @@ def sma_gemm(a: jax.Array, b: jax.Array, *,
              backend: Optional[str] = None,
              interpret: bool = False,
              accum_dtype: jnp.dtype = jnp.float32,
-             block_m: int = 256, block_n: int = 256,
-             block_k: int = 512) -> jax.Array:
-    """Fused GEMM + bias + activation (the LSMA macro-op)."""
+             precision=None,
+             block_m: Optional[int] = None, block_n: Optional[int] = None,
+             block_k: Optional[int] = None,
+             autotune: bool = False) -> jax.Array:
+    """Fused GEMM + bias + activation (the LSMA macro-op).
+
+    ``block_*=None`` resolves shape-aware blocks from
+    :mod:`repro.kernels.autotune`; ``autotune=True`` additionally runs the
+    measured search (cached per shape/dtype) on the kernel backends.
+    """
     backend = "interpret" if interpret else _resolve(backend)
     if backend == "xla":
         return _ref.gemm_ref(a, b, bias=bias, epilogue=epilogue,
-                             accum_dtype=accum_dtype)
+                             accum_dtype=accum_dtype, precision=precision)
+    if autotune and (block_m is None or block_n is None or block_k is None):
+        from repro.kernels import autotune as _tune
+        m = 1
+        for d in a.shape[:-1]:
+            m *= d
+        bm, bn, bk = _tune.measured_blocks(
+            m, b.shape[1], a.shape[-1], a.dtype,
+            interpret=(backend == "interpret"))
+        block_m, block_n, block_k = (block_m or bm, block_n or bn,
+                                     block_k or bk)
     from repro.kernels.sma_gemm import sma_gemm as _kernel
     return _kernel(a, b, bias=bias, epilogue=epilogue,
                    block_m=block_m, block_n=block_n, block_k=block_k,
                    interpret=(backend == "interpret"),
-                   accum_dtype=accum_dtype)
+                   accum_dtype=accum_dtype, precision=precision)
 
 
 def rmsnorm_gemm(x: jax.Array, scale: jax.Array, w: jax.Array, *,
                  epilogue: str = "none", eps: float = 1e-6,
                  backend: Optional[str] = None,
                  interpret: bool = False,
-                 block_m: int = 256, block_n: int = 256,
-                 block_k: int = 512) -> jax.Array:
+                 precision=None,
+                 block_m: Optional[int] = None, block_n: Optional[int] = None,
+                 block_k: Optional[int] = None) -> jax.Array:
     """Fused SIMD-prologue norm + systolic GEMM (SMA prologue fusion)."""
     backend = "interpret" if interpret else _resolve(backend)
     if backend == "xla":
-        return _ref.rmsnorm_gemm_ref(x, scale, w, epilogue=epilogue, eps=eps)
+        return _ref.rmsnorm_gemm_ref(x, scale, w, epilogue=epilogue, eps=eps,
+                                     precision=precision)
     from repro.kernels.norm_gemm import rmsnorm_gemm as _kernel
     return _kernel(x, scale, w, epilogue=epilogue, eps=eps,
                    block_m=block_m, block_n=block_n, block_k=block_k,
-                   interpret=(backend == "interpret"))
+                   interpret=(backend == "interpret"), precision=precision)
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

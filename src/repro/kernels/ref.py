@@ -22,9 +22,11 @@ from repro.core.sma import EPILOGUES
 # --------------------------------------------------------------------------
 def gemm_ref(a: jax.Array, b: jax.Array, *, bias: Optional[jax.Array] = None,
              epilogue: str = "none",
-             accum_dtype: jnp.dtype = jnp.float32) -> jax.Array:
+             accum_dtype: jnp.dtype = jnp.float32,
+             precision=None) -> jax.Array:
     """C = epilogue(A @ B + bias), accumulated in ``accum_dtype``."""
-    out = jnp.matmul(a.astype(accum_dtype), b.astype(accum_dtype))
+    out = jnp.matmul(a.astype(accum_dtype), b.astype(accum_dtype),
+                     precision=precision)
     if bias is not None:
         out = out + bias.astype(accum_dtype)
     out = EPILOGUES[epilogue](out)
@@ -32,13 +34,15 @@ def gemm_ref(a: jax.Array, b: jax.Array, *, bias: Optional[jax.Array] = None,
 
 
 def rmsnorm_gemm_ref(x: jax.Array, scale: jax.Array, w: jax.Array, *,
-                     epilogue: str = "none", eps: float = 1e-6) -> jax.Array:
+                     epilogue: str = "none", eps: float = 1e-6,
+                     precision=None) -> jax.Array:
     """epilogue(rmsnorm(x; scale) @ w) — norm_gemm oracle."""
     x32 = x.astype(jnp.float32)
     var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
     normed = (x32 * jax.lax.rsqrt(var + eps)
               * scale.astype(jnp.float32)).astype(x.dtype)
-    out = jnp.matmul(normed.astype(jnp.float32), w.astype(jnp.float32))
+    out = jnp.matmul(normed.astype(jnp.float32), w.astype(jnp.float32),
+                     precision=precision)
     out = EPILOGUES[epilogue](out)
     return out.astype(x.dtype)
 

@@ -25,9 +25,11 @@ SIMD epilogue after sync                fused VPU epilogue (bias + activation)
                                         HBM round-trip
 =====================================  =====================================
 
-Block shapes default to (256, 256, 512) — multiples of the 128x128 MXU tile
-and the (8,128) VPU lane grid, sized so A+B+C blocks (~0.8 MB at bf16) fit
-VMEM (~16 MB) with headroom for double buffering.
+Block shapes default to ``None`` — resolved per problem shape and dtype by
+:func:`repro.kernels.autotune.heuristic_blocks` (multiples of the 128x128
+MXU tile and the (8,128) VPU lane grid, clipped to the problem and shrunk to
+fit VMEM with headroom for double buffering).  Explicit ``block_*``
+arguments always win.
 """
 from __future__ import annotations
 
@@ -45,7 +47,7 @@ from repro.core.sma import EPILOGUES
 
 
 def _sma_gemm_kernel(a_ref, b_ref, bias_ref, o_ref, acc_ref, *,
-                     epilogue: str, n_k: int, out_dtype):
+                     epilogue: str, n_k: int, out_dtype, precision):
     """One (i, j, k) grid step: C_block += A_block @ B_block (+ epilogue)."""
     k_idx = pl.program_id(2)
 
@@ -59,6 +61,7 @@ def _sma_gemm_kernel(a_ref, b_ref, bias_ref, o_ref, acc_ref, *,
     # Weight-stationary MXU pass: B block pinned, A streamed through.
     acc_ref[...] += jax.lax.dot_general(
         a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        precision=precision,
         preferred_element_type=acc_ref.dtype)
 
     # -- SIMD (epilogue) phase ----------------------------------------------
@@ -76,17 +79,21 @@ def _sma_gemm_kernel(a_ref, b_ref, bias_ref, o_ref, acc_ref, *,
 @functools.partial(
     jax.jit,
     static_argnames=("epilogue", "block_m", "block_n", "block_k",
-                     "interpret", "accum_dtype"))
+                     "interpret", "accum_dtype", "precision"))
 def sma_gemm(a: jax.Array, b: jax.Array, *,
              bias: Optional[jax.Array] = None,
              epilogue: str = "none",
-             block_m: int = 256, block_n: int = 256, block_k: int = 512,
+             block_m: Optional[int] = None, block_n: Optional[int] = None,
+             block_k: Optional[int] = None,
              interpret: bool = False,
-             accum_dtype: jnp.dtype = jnp.float32) -> jax.Array:
+             accum_dtype: jnp.dtype = jnp.float32,
+             precision=None) -> jax.Array:
     """``C = epilogue(A @ B + bias)`` via the SMA dataflow Pallas kernel.
 
     a: (..., M, K); b: (K, N); bias: (N,) or None.  Leading dims of ``a`` are
     collapsed into M (the paper's thread-block grid over the output).
+    ``block_*=None`` resolves shape-aware blocks from
+    :mod:`repro.kernels.autotune`.
     """
     orig_shape = a.shape
     m_total = 1
@@ -98,6 +105,9 @@ def sma_gemm(a: jax.Array, b: jax.Array, *,
     if b.shape[0] != k_dim:
         raise ValueError(f"A/B contraction mismatch: {a.shape} @ {b.shape}")
 
+    from repro.kernels.autotune import resolve_blocks
+    block_m, block_n, block_k = resolve_blocks(
+        m_total, n_dim, k_dim, a.dtype, block_m, block_n, block_k)
     bm = min(block_m, m_total)
     bn = min(block_n, n_dim)
     bk = min(block_k, k_dim)
@@ -124,12 +134,13 @@ def sma_gemm(a: jax.Array, b: jax.Array, *,
         in_specs.append(pl.BlockSpec((1, bn), lambda i, j, k: (0, j)))
         inputs.append(bias.reshape(1, -1))
         kernel = functools.partial(_sma_gemm_kernel, epilogue=epilogue,
-                                   n_k=grid[2], out_dtype=a.dtype)
+                                   n_k=grid[2], out_dtype=a.dtype,
+                                   precision=precision)
     else:
         def kernel(a_ref, b_ref, o_ref, acc_ref):
             _sma_gemm_kernel(a_ref, b_ref, None, o_ref, acc_ref,
                              epilogue=epilogue, n_k=grid[2],
-                             out_dtype=a.dtype)
+                             out_dtype=a.dtype, precision=precision)
 
     out = pl.pallas_call(
         kernel,
