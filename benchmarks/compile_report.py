@@ -19,8 +19,8 @@ import jax.numpy as jnp
 def family_report(arch: str, *, seq_len: int = 512, batch: int = 1,
                   reduced: bool = False) -> Dict[str, Any]:
     """Compile one architecture and return its plan report."""
+    import repro
     import repro.configs as C
-    from repro import compiler
     from repro.models import lm
     from repro.models.layers import Runtime
 
@@ -46,9 +46,9 @@ def family_report(arch: str, *, seq_len: int = 512, batch: int = 1,
 
     p_shapes = jax.eval_shape(lambda k: lm.init(k, cfg)[0],
                               jax.random.PRNGKey(0))
-    compiled = compiler.compile_model(
-        lambda p, b: lm.forward(p, cfg, rt, b), p_shapes, batch_shapes,
-        name=cfg.name)
+    engine = repro.sma_jit(lambda p, b: lm.forward(p, cfg, rt, b),
+                           name=cfg.name)
+    compiled = engine.compile(p_shapes, batch_shapes)
     report = compiled.report
     report["family"] = cfg.family
     report["traced_shape"] = {"batch": batch, "seq_len": s}

@@ -151,6 +151,66 @@ def gemm_chain_paths() -> List[Row]:
     return rows
 
 
+def engine_paths() -> List[Row]:
+    """Engine front-door accounting: cold compile vs cached-call latency
+    for a decode-MLP chain at three batch sizes.
+
+    ``percall`` is the old front door's cost model: the full
+    trace → lower → plan → rewrite pipeline runs again for every call
+    (what ``compile_model``-per-tick serving effectively paid).  ``cold``
+    is the engine's one-time bill for a new abstract signature (pipeline +
+    ``jax.jit`` + first execution).  ``cached`` is steady state: abstract
+    signature lookup + the pre-jitted executable — the row that must beat
+    ``percall`` (gated by ``--bench-check``), since cache-hit dispatch
+    overhead silently regressing is exactly what the engine exists to
+    prevent.
+    """
+    import time as _time_mod
+
+    from repro.api import SMAOptions, sma_jit
+    from repro.compiler.dispatch import compile_with_options
+
+    def chain(x, w1, b1, w2, b2):
+        h = jax.nn.gelu(x @ w1 + b1, approximate=True)
+        return h @ w2 + b2
+
+    rows: List[Row] = []
+    k, n = 512, 2048
+    for m in (1, 8, 32):
+        key = jax.random.PRNGKey(7)
+        x = jax.random.normal(key, (m, k), jnp.float32)
+        w1 = jax.random.normal(key, (k, n), jnp.float32) * k ** -0.5
+        b1 = jax.random.normal(key, (n,), jnp.float32)
+        w2 = jax.random.normal(key, (n, k), jnp.float32) * n ** -0.5
+        b2 = jax.random.normal(key, (k,), jnp.float32)
+        args = (x, w1, b1, w2, b2)
+        opts = SMAOptions(backend="xla", jit=True)
+
+        # cold: a fresh engine's first call (compile + jit + execute).
+        engine = sma_jit(chain, options=opts, name=f"decode_mlp_m{m}")
+        t0 = _time_mod.perf_counter()
+        jax.block_until_ready(engine(*args))
+        t_cold = (_time_mod.perf_counter() - t0) * 1e6
+
+        # percall: the pre-engine front door — recompile on every call
+        # (jit=False, matching compile_model's historical default).
+        percall_opts = SMAOptions(backend="xla")
+
+        def percall(*a):
+            return compile_with_options(chain, *a, options=percall_opts)(*a)
+
+        t_percall = _time_latency(percall, *args, iters=5)
+        t_cached = _time_latency(engine, *args, iters=50)
+        tag = f"m{m}k{k}n{n}"
+        rows += [
+            (f"engine.decode_mlp.{tag}.cold", t_cold, t_cold / t_cached),
+            (f"engine.decode_mlp.{tag}.percall", t_percall, 1.0),
+            (f"engine.decode_mlp.{tag}.cached", t_cached,
+             t_percall / t_cached),
+        ]
+    return rows
+
+
 def fusion_accounting() -> List[Row]:
     """SMA temporal-fusion savings on one LM block (HBM bytes avoided)."""
     b, s, d, ff, h = 16, 4096, 4096, 14336, 32
@@ -187,10 +247,12 @@ def fusion_accounting() -> List[Row]:
 
 
 def smoke_rows() -> List[Row]:
-    """The cheap regression set: fused-vs-unfused chains + symbolic fusion
-    accounting.  This is what CI records to ``BENCH_kernels.json``."""
+    """The cheap regression set: fused-vs-unfused chains, engine cold/cached
+    front-door latency, and symbolic fusion accounting.  This is what CI
+    records to ``BENCH_kernels.json``."""
     rows: List[Row] = []
     rows += gemm_chain_paths()
+    rows += engine_paths()
     rows += fusion_accounting()
     return rows
 
@@ -201,5 +263,6 @@ def all_rows() -> List[Row]:
     rows += rglru_paths()
     rows += mlstm_paths()
     rows += gemm_chain_paths()
+    rows += engine_paths()
     rows += fusion_accounting()
     return rows

@@ -19,27 +19,36 @@ _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, _REPO_ROOT)
 
 
+#: (fast suffix, baseline suffix) pairs the bench gate enforces: the fast
+#: row must not be slower than baseline * slack.
+_CHECK_PAIRS = ((".fused", ".unfused"), (".cached", ".percall"))
+
+
 def check_chain_rows(rows, *, slack: float = 1.25) -> int:
-    """Enforce the fusion acceptance bar: every ``.fused`` chain row must be
-    no slower than its ``.unfused`` counterpart times ``slack``.
+    """Enforce the acceptance bars: every ``.fused`` chain row must be no
+    slower than its ``.unfused`` counterpart times ``slack``, and every
+    engine ``.cached`` row must beat its per-call-compile ``.percall``
+    baseline the same way (cache-hit dispatch overhead must stay amortized).
 
     The slack is deliberately coarse: shared CI runners jitter by tens of
-    percent, while a genuine fusion regression (an extra materialization or
-    dispatch on the fused path) erases the whole fused margin and then
-    some — this is a tripwire for the pathological case, not a
+    percent, while a genuine regression (an extra materialization on the
+    fused path; a re-trace on the cached path) erases the whole margin and
+    then some — this is a tripwire for the pathological case, not a
     high-resolution perf gate.  Returns the number of violations."""
     by_name = {name: us for name, us, _ in rows}
     bad = 0
     for name, us in sorted(by_name.items()):
-        if not name.endswith(".fused"):
-            continue
-        base = by_name.get(name[:-len(".fused")] + ".unfused")
-        if base is None:
-            continue
-        ok = us <= base * slack
-        print(f"# check {name}: fused {us:.1f}us vs unfused {base:.1f}us "
-              f"-> {'ok' if ok else 'REGRESSION'}")
-        bad += 0 if ok else 1
+        for fast, base_sfx in _CHECK_PAIRS:
+            if not name.endswith(fast):
+                continue
+            base = by_name.get(name[:-len(fast)] + base_sfx)
+            if base is None:
+                continue
+            ok = us <= base * slack
+            print(f"# check {name}: {fast[1:]} {us:.1f}us vs "
+                  f"{base_sfx[1:]} {base:.1f}us "
+                  f"-> {'ok' if ok else 'REGRESSION'}")
+            bad += 0 if ok else 1
     return bad
 
 

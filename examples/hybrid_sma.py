@@ -4,13 +4,14 @@ Builds a hybrid workload (GEMM backbone + GEMM-incompatible ops: top-k
 proposal selection à la NMS, gather-based RoI pooling, an iterative
 CRF-like refinement) and runs it three ways:
 
-  1. **Compile: trace → plan** — ``repro.compiler`` traces the JAX function
+  1. **Compile: trace → plan** — ``repro.sma_jit`` traces the JAX function
      to a jaxpr, lowers it to the symbolic op IR, and the SMA policy plans
      temporal modes + fusion groups.  No hand-written op lists: the plan is
      derived from the program itself.
-  2. **Execute through the plan** — the compiled callable dispatches every
-     SYSTOLIC-anchored GEMM to the fused ``sma_gemm`` entry point and
-     matches the native JAX result.
+  2. **Execute through the plan** — the engine dispatches every
+     SYSTOLIC-anchored GEMM to the fused ``sma_gemm`` entry point, matches
+     the native JAX result, and caches the executable per abstract
+     signature — the second call does zero re-trace/re-plan work.
   3. **Analytical platform comparison** — the same workload on the paper's
      three platforms (GPU+TC baseline, GEMM-only lowering à la TPU, SMA),
      via the calibrated dataflow model: Fig. 2/3/8 in one script.
@@ -21,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import compiler
+import repro
 from repro.core import dataflow as df
 from repro.core.modes import OpKind, mode_histogram
 
@@ -59,9 +60,12 @@ def hybrid_forward(feats):
 #    jaxpr — dot_general->MATMUL, softmax->REDUCTION+ELEMENTWISE,
 #    top_k->TOPK, take_along_axis->GATHER_SCATTER; the short CRF loop
 #    unrolls (long loops coarsen to a RECURRENCE carry marker instead).
+#    sma_jit is the front door: the plan/executable below is the engine's
+#    cache entry for this abstract signature.
 # ---------------------------------------------------------------------------
-compiled = compiler.compile_model(hybrid_forward, feats,
-                                  name="hybrid-detector", backend="xla")
+engine = repro.sma_jit(hybrid_forward, name="hybrid-detector",
+                       options=repro.SMAOptions(backend="xla"))
+compiled = engine.compile(feats)
 summary = compiled.summary
 hist = {m.value: f"{v:.1%}" for m, v in
         mode_histogram(compiled.plan.ops).items()}
@@ -77,9 +81,16 @@ print(f"[hybrid] plan: {summary.groups} groups, "
 assert OpKind.TOPK in set(kinds) and OpKind.GATHER_SCATTER in set(kinds)
 
 # ---------------------------------------------------------------------------
-# 3) Execute through the plan: systolic groups dispatch to sma_gemm.
+# 3) Execute through the plan: systolic groups dispatch to sma_gemm.  Both
+#    calls hit the executable compiled above — the engine never re-traces
+#    for a signature it has seen.
 # ---------------------------------------------------------------------------
-labels, pooled, top_scores = compiled(feats)
+labels, pooled, top_scores = engine(feats)
+engine(feats)
+assert engine.stats.misses == 1 and engine.stats.hits >= 2, engine.stats
+print(f"[hybrid] engine cache: {engine.stats.hits} hits / "
+      f"{engine.stats.misses} compile "
+      f"({engine.stats.compile_time_s * 1e3:.1f} ms)")
 want_labels, want_pooled, want_scores = hybrid_forward(feats)
 np.testing.assert_array_equal(np.asarray(labels), np.asarray(want_labels))
 np.testing.assert_allclose(np.float32(pooled), np.float32(want_pooled),

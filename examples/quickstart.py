@@ -1,9 +1,14 @@
 """Quickstart: the SMA library in five minutes.
 
-1. Plan a transformer block with the SMA policy (mode assignment + fusion).
-2. Run a fused systolic+SIMD matmul (the LSMA analogue) on the Pallas kernel
-   (interpret mode on CPU) and check it against the oracle.
-3. Instantiate an assigned architecture (reduced) and take one training step.
+1. `repro.sma_jit` — the public front door: wrap a model function, get a
+   shape-polymorphic compile cache (trace → plan → fuse → dispatch once per
+   abstract signature, cache hits after that).
+2. `repro.options` — the single configuration path: one context manager
+   scopes backend/autotune/precision for everything inside it.
+3. Plan a transformer block with the SMA policy (mode assignment + fusion).
+4. Run the fused systolic+SIMD kernel (the LSMA analogue) in Pallas
+   interpret mode on CPU and check it against the oracle.
+5. Instantiate an assigned architecture (reduced) and take one training step.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,16 +16,64 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro
 import repro.configs as C
-from repro.core import SMAPolicy, sma_matmul
+from repro.core import SMAPolicy
 from repro.core.modes import Op, OpKind
-from repro.kernels import ref
+from repro.kernels import ops, ref
 from repro.models import lm
 from repro.models.layers import Runtime
 from repro.optim import adamw
 
 print("=" * 70)
-print("1) SMA policy: temporal mode planning over a transformer block")
+print("1) sma_jit: compile once per abstract signature, then cache hits")
+print("=" * 70)
+key = jax.random.PRNGKey(0)
+w1 = jax.random.normal(key, (256, 512), jnp.float32) * 256 ** -0.5
+w2 = jax.random.normal(jax.random.PRNGKey(1), (512, 128), jnp.float32) \
+    * 512 ** -0.5
+b1 = jnp.ones((512,), jnp.float32) * 0.1
+
+
+@repro.sma_jit
+def mlp(x):
+    # dot -> bias -> gelu fuses into ONE sma_gemm call; the second dot
+    # dispatches bare through the systolic entry point.
+    return jax.nn.gelu(x @ w1 + b1, approximate=True) @ w2
+
+
+x8 = jax.random.normal(jax.random.PRNGKey(2), (8, 256), jnp.float32)
+x64 = jax.random.normal(jax.random.PRNGKey(3), (64, 256), jnp.float32)
+mlp(x8)                 # compiles (miss) for batch 8
+mlp(x8)                 # cache hit: zero re-trace/re-plan work
+mlp(x64)                # new signature -> compiled once for batch 64
+mlp(x64)
+st = mlp.stats
+print(f"engine: {mlp.cache_size} cached signatures, {st.misses} compiles, "
+      f"{st.hits} cache hits ({st.hit_rate:.0%}), "
+      f"compile {st.compile_time_s * 1e3:.1f} ms total "
+      f"({st.amortized_compile_s * 1e3:.2f} ms/call amortized)")
+compiled = mlp.compile(x8)   # the cached executable + its plan report
+fus = compiled.report["fusion"]
+print(f"plan for batch 8: {fus['realized_fused_sites']} fused GEMM sites, "
+      f"{compiled.report['dispatch']['systolic_dispatch_sites']} systolic "
+      f"dispatch sites")
+assert st.misses == 2 and st.hits >= 2  # compile() above was a hit too
+
+print()
+print("=" * 70)
+print("2) repro.options: one scoped configuration for the whole stack")
+print("=" * 70)
+with repro.options(backend="interpret", autotune=False):
+    y_interp = mlp(x8)        # same engine, interpret-mode entry (new key)
+np.testing.assert_allclose(np.asarray(y_interp), np.asarray(mlp(x8)),
+                           rtol=2e-4, atol=2e-4)
+print(f"interpret-mode entry compiled under the context; engine now holds "
+      f"{mlp.cache_size} signatures (options are part of the cache key)")
+
+print()
+print("=" * 70)
+print("3) SMA policy: temporal mode planning over a transformer block")
 print("=" * 70)
 block = [
     Op("norm", OpKind.NORMALIZATION, flops=1e8, bytes_in=1e8),
@@ -44,13 +97,12 @@ print(f"systolic FLOP share:  {summary.systolic_flop_share:.1%}")
 
 print()
 print("=" * 70)
-print("2) sma_matmul: fused GEMM + SIMD epilogue (Pallas, interpret mode)")
+print("4) sma_gemm: fused GEMM + SIMD epilogue (Pallas, interpret mode)")
 print("=" * 70)
-key = jax.random.PRNGKey(0)
 a = jax.random.normal(key, (256, 512), jnp.float32)
 b = jax.random.normal(jax.random.PRNGKey(1), (512, 384), jnp.float32)
 bias = jnp.ones((384,), jnp.float32) * 0.1
-got = sma_matmul(a, b, epilogue="gelu", bias=bias, interpret=True)
+got = ops.sma_gemm(a, b, epilogue="gelu", bias=bias, interpret=True)
 want = ref.gemm_ref(a, b, bias=bias, epilogue="gelu")
 np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 print(f"kernel == oracle  (max |err| = "
@@ -58,7 +110,7 @@ print(f"kernel == oracle  (max |err| = "
 
 print()
 print("=" * 70)
-print("3) One training step of an assigned architecture (reduced config)")
+print("5) One training step of an assigned architecture (reduced config)")
 print("=" * 70)
 cfg = C.reduced(C.get_config("qwen3-moe-30b-a3b"))
 print(f"arch: {cfg.name} ({cfg.num_layers} layers, "

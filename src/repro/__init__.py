@@ -1,0 +1,41 @@
+"""SMA: temporal GPU–systolic array integration on JAX/Pallas.
+
+Public API (the single front door)::
+
+    import repro
+
+    engine = repro.sma_jit(model_fn, options=repro.SMAOptions(...))
+    out = engine(*args)              # compiles once per abstract signature
+    engine.stats                     # cache hits/misses, compile time
+
+    with repro.options(backend="interpret", autotune=False):
+        ...                          # scoped configuration overlay
+
+Subsystems live in subpackages (``repro.compiler``, ``repro.kernels``,
+``repro.models``, ``repro.core``, ...).  Imports here are lazy (PEP 562) so
+``import repro.configs`` and friends stay light.
+"""
+from typing import Any
+
+__version__ = "0.1.0"
+
+_API_EXPORTS = {
+    "sma_jit", "Engine", "EngineStats", "abstract_signature",
+    "SMAOptions", "options", "current_options", "resolve_options",
+}
+
+__all__ = sorted(_API_EXPORTS) + ["compiler"]
+
+
+def __getattr__(name: str) -> Any:
+    if name in _API_EXPORTS:
+        import repro.api as _api
+        return getattr(_api, name)
+    if name == "compiler":
+        import repro.compiler as _compiler
+        return _compiler
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -1,0 +1,26 @@
+"""``repro.api`` — the public front door of the SMA framework.
+
+* :func:`sma_jit` / :class:`Engine` — decorate any jittable model function;
+  executables are compiled lazily and cached per abstract signature
+  (shapes, dtypes, weak_type, static kwargs), like ``jax.jit``.
+* :class:`SMAOptions` / :func:`options` / :func:`current_options` — the one
+  configuration path threaded through trace → fuse → rewrite → dispatch →
+  kernels, with a context-manager overlay for scoped overrides.
+
+Everything here is re-exported from the top-level ``repro`` package.
+"""
+from repro.api.engine import Engine, EngineStats, abstract_signature, sma_jit
+from repro.api.options import (DEFAULTS, SMAOptions, current_options, options,
+                               resolve_options)
+
+__all__ = [
+    "Engine",
+    "EngineStats",
+    "abstract_signature",
+    "sma_jit",
+    "SMAOptions",
+    "options",
+    "current_options",
+    "resolve_options",
+    "DEFAULTS",
+]

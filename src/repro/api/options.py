@@ -1,0 +1,202 @@
+"""``SMAOptions`` — the single configuration surface for the SMA stack.
+
+Before this module existed, every layer of the framework grew its own copy
+of the same knobs: ``kernels.ops.sma_gemm`` took ``backend``/``interpret``/
+``autotune``/``block_*``, ``core.sma.sma_matmul`` duplicated them, and
+``compiler.compile_model`` took a third overlapping set — with no way to say
+"this whole region of the program runs interpreted, un-autotuned" once.
+
+Now there is exactly one source of truth:
+
+* :class:`SMAOptions` — a frozen (hashable) dataclass holding every knob the
+  trace → fuse → rewrite → dispatch → kernel pipeline consumes.  A field
+  left as ``None`` means *inherit* (from an enclosing ``options(...)``
+  context, else the framework default), so options objects compose by
+  overlay rather than by clobbering.
+* :func:`options` — a context manager pushing a partial overlay::
+
+      with repro.options(backend="interpret", autotune=False):
+          y = engine(x)            # compiles + runs interpreted
+          with repro.options(backend="xla"):
+              z = engine(x)        # inner override wins; autotune=False kept
+
+* :func:`current_options` — the fully-resolved ambient options (defaults
+  overlaid by every active ``options(...)`` layer).  The kernel entry points
+  consult this for any knob not passed explicitly, so even hand-written
+  ``ops.sma_gemm`` calls obey the ambient configuration.
+* :func:`resolve_options` — ambient options overlaid by an explicit
+  per-engine / per-call :class:`SMAOptions`.  This is what the engine bakes
+  into each cached executable (and into its cache key — changing options
+  recompiles, exactly like ``jax.jit`` static args).
+
+This module is dependency-free on purpose (no jax, no repro imports): the
+kernels and the compiler both import it without cycles.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Any, Iterator, Optional, Tuple
+
+__all__ = ["SMAOptions", "options", "current_options", "resolve_options",
+           "DEFAULTS"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SMAOptions:
+    """Every configuration knob of the SMA pipeline, in one frozen object.
+
+    ``None`` means "inherit from the enclosing context / default" for every
+    field, so partial options overlay cleanly (see :func:`options`).  The
+    object is hashable — the engine uses resolved options as part of its
+    compile-cache key.
+
+    Fields (grouped by the stage that consumes them):
+
+    dispatch / kernels
+      * ``backend`` — ``"pallas"`` | ``"interpret"`` | ``"xla"`` | ``"auto"``
+        (auto: pallas on TPU, xla elsewhere).
+      * ``interpret`` — force the Pallas interpreter (CPU kernel-logic runs).
+      * ``autotune`` — measured block search on the kernel backends.
+      * ``precision`` — forwarded to the GEMM contraction (``jax.lax``
+        precision); program-level precision on a traced ``dot`` still wins.
+      * ``block_m``/``block_n``/``block_k`` — explicit kernel tile overrides
+        (``None`` defers to the shape-aware autotune table).
+
+    plan / rewrite
+      * ``fuse_runtime`` — run the fusion-rewrite pass (``False`` = the
+        spatially-decoupled A/B baseline).
+      * ``fuse_epilogues`` / ``max_epilogue_ops`` — :class:`SMAPolicy` knobs.
+      * ``policy`` — a pre-built ``SMAPolicy`` escape hatch (wins over the
+        two knobs above).
+
+    trace / engine
+      * ``max_scan_unroll`` — scans at most this long unroll during lowering.
+      * ``jit`` — wrap the dispatched executable in ``jax.jit`` (the serving
+        configuration: pay one XLA compile per signature, then native-speed
+        steady state).
+      * ``donate_argnums`` — top-level positional arguments whose buffers
+        XLA may reuse for outputs (``jax.jit`` donation; the train-step
+        configuration so params/optimizer state update in place).  Only
+        honored when ``jit`` is on — the interpreted path cannot donate.
+        Donated arguments are consumed: do not reuse them after the call.
+    """
+
+    backend: Optional[str] = None
+    interpret: Optional[bool] = None
+    autotune: Optional[bool] = None
+    precision: Any = None
+    fuse_runtime: Optional[bool] = None
+    fuse_epilogues: Optional[bool] = None
+    max_epilogue_ops: Optional[int] = None
+    max_scan_unroll: Optional[int] = None
+    jit: Optional[bool] = None
+    donate_argnums: Optional[Tuple[int, ...]] = None
+    block_m: Optional[int] = None
+    block_n: Optional[int] = None
+    block_k: Optional[int] = None
+    policy: Any = None
+
+    _FIELDS = ("backend", "interpret", "autotune", "precision",
+               "fuse_runtime", "fuse_epilogues", "max_epilogue_ops",
+               "max_scan_unroll", "jit", "donate_argnums",
+               "block_m", "block_n", "block_k", "policy")
+
+    def overlay(self, other: Optional["SMAOptions"]) -> "SMAOptions":
+        """``other``'s explicitly-set (non-``None``) fields override ours."""
+        if other is None:
+            return self
+        updates = {f: getattr(other, f) for f in self._FIELDS
+                   if getattr(other, f) is not None}
+        return dataclasses.replace(self, **updates) if updates else self
+
+    def replace(self, **updates: Any) -> "SMAOptions":
+        return dataclasses.replace(self, **updates)
+
+    def cache_key(self) -> Tuple[Any, ...]:
+        """Hashable identity for the compile cache.
+
+        ``policy`` objects hash by identity; including the object itself
+        (rather than its ``id()``) keeps it alive for the lifetime of the
+        cache key, so a recycled id can never alias two policies.
+        """
+        return tuple(getattr(self, f) for f in self._FIELDS)
+
+    def asdict(self) -> dict:
+        """JSON-friendly view (for plan reports)."""
+        out = {}
+        for f in self._FIELDS:
+            v = getattr(self, f)
+            if f == "policy":
+                v = type(v).__name__ if v is not None else None
+            elif f == "precision" and v is not None:
+                v = str(v)
+            out[f] = v
+        return out
+
+
+#: The framework-wide resolved defaults (``backend=None`` keeps its
+#: long-standing meaning: auto — pallas on TPU, xla elsewhere).
+DEFAULTS = SMAOptions(
+    backend=None,
+    interpret=False,
+    autotune=False,
+    precision=None,
+    fuse_runtime=True,
+    fuse_epilogues=True,
+    max_epilogue_ops=4,
+    max_scan_unroll=8,
+    jit=False,
+    donate_argnums=None,
+    block_m=None,
+    block_n=None,
+    block_k=None,
+    policy=None,
+)
+
+_STACK: contextvars.ContextVar[Tuple[SMAOptions, ...]] = \
+    contextvars.ContextVar("repro_sma_options_stack", default=())
+
+
+def current_options() -> SMAOptions:
+    """Defaults overlaid by every active :func:`options` context, inner last.
+
+    The result is fully resolved except for the fields whose ``None`` is
+    itself meaningful (``backend`` auto, ``precision`` default, ``block_*``
+    autotable, ``policy`` derived from the fuse knobs).
+    """
+    merged = DEFAULTS
+    for layer in _STACK.get():
+        merged = merged.overlay(layer)
+    return merged
+
+
+def resolve_options(*overlays: Optional[SMAOptions]) -> SMAOptions:
+    """Ambient :func:`current_options` overlaid by explicit options, in
+    order — the engine's per-call resolution (engine options beat context)."""
+    merged = current_options()
+    for layer in overlays:
+        merged = merged.overlay(layer)
+    return merged
+
+
+@contextlib.contextmanager
+def options(opts: Optional[SMAOptions] = None, /,
+            **fields: Any) -> Iterator[SMAOptions]:
+    """Push a partial :class:`SMAOptions` overlay for the ``with`` scope.
+
+    Accepts either a pre-built :class:`SMAOptions` or keyword fields (but
+    not both).  Nested contexts overlay field-wise: the innermost explicitly
+    set value wins, unset fields fall through to outer scopes.  Yields the
+    resolved options for convenience.
+    """
+    if opts is not None and fields:
+        raise TypeError("pass an SMAOptions object OR keyword fields, "
+                        "not both")
+    layer = opts if opts is not None else SMAOptions(**fields)
+    token = _STACK.set(_STACK.get() + (layer,))
+    try:
+        yield current_options()
+    finally:
+        _STACK.reset(token)

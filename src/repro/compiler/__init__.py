@@ -24,14 +24,19 @@ op lists into the framework's actual execution front-end:
    epilogues, HBM bytes avoided, systolic FLOP share) reconciling *planned*
    vs *realized* fusion.
 
-Front door::
+Front door: ``repro.sma_jit`` (see :mod:`repro.api`) wraps this pipeline in
+a shape-polymorphic compile cache::
 
-    compiled = compiler.compile_model(fn, example_args)
-    out = compiled(real_args)          # systolic groups -> sma_gemm
-    compiled.summary                   # PlanSummary
-    compiled.report                    # JSON-safe plan report
+    engine = repro.sma_jit(fn, options=repro.SMAOptions(...))
+    out = engine(real_args)            # compiles once per abstract signature
+    engine.compile(args).summary       # PlanSummary for one signature
+    engine.compile(args).report        # JSON-safe plan report
+
+``compile_model(fn, example_args)`` remains as a deprecated one-signature
+wrapper over the engine.
 """
 from repro.compiler.dispatch import (CompiledModel, compile_model,
+                                     compile_with_options,
                                      count_dispatch_sites, sma_eligible)
 from repro.compiler.fuse import ModelPlan, plan_program
 from repro.compiler.lower import (LoweredProgram, LowerStats,
@@ -45,6 +50,7 @@ from repro.compiler.trace import TracedModel, trace_model
 __all__ = [
     "CompiledModel",
     "compile_model",
+    "compile_with_options",
     "count_dispatch_sites",
     "sma_eligible",
     "ModelPlan",

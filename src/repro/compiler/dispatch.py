@@ -30,12 +30,14 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 from jax import core
 
+from repro.api.options import SMAOptions, resolve_options
 from repro.compiler.fuse import ModelPlan, plan_program
 from repro.compiler.lower import lower_jaxpr
 from repro.compiler.report import fusion_section, plan_report
@@ -88,10 +90,11 @@ def count_dispatch_sites(jaxpr: core.Jaxpr) -> Dict[str, int]:
 # The interpreter
 # --------------------------------------------------------------------------
 class _Interpreter:
-    def __init__(self, backend: Optional[str], interpret: bool,
+    def __init__(self, options: SMAOptions,
                  rewrite: Optional[RewriteResult] = None) -> None:
-        self.backend = backend
-        self.interpret = interpret
+        self.options = options
+        self.backend = options.backend
+        self.interpret = bool(options.interpret)
         self.rewrite = rewrite
 
     # -------------------------------------------------------------- eval
@@ -155,6 +158,14 @@ class _Interpreter:
         return self.eval(jx, (), invals)
 
     # ---------------------------------------------------------- handlers
+    def _gemm_knobs(self) -> Dict[str, Any]:
+        """Kernel-facing knobs from the one options object (the single
+        configuration path: options -> dispatch -> kernels)."""
+        o = self.options
+        return dict(backend=self.backend, interpret=self.interpret,
+                    autotune=bool(o.autotune), block_m=o.block_m,
+                    block_n=o.block_n, block_k=o.block_k)
+
     def _dot(self, eqn, invals):
         from repro.kernels import ops as kernel_ops
         a, b = invals
@@ -162,10 +173,11 @@ class _Interpreter:
         # f64 inputs (x64 mode) down to f32.
         accum = eqn.params.get("preferred_element_type") \
             or jnp.promote_types(a.dtype, jnp.float32)
-        out = kernel_ops.sma_gemm(a, b, backend=self.backend,
-                                  interpret=self.interpret,
+        out = kernel_ops.sma_gemm(a, b,
                                   accum_dtype=jnp.dtype(accum),
-                                  precision=eqn.params.get("precision"))
+                                  precision=eqn.params.get("precision")
+                                  or self.options.precision,
+                                  **self._gemm_knobs())
         out_aval = eqn.outvars[0].aval
         if out.dtype != out_aval.dtype:
             out = out.astype(out_aval.dtype)
@@ -173,22 +185,25 @@ class _Interpreter:
 
     def _fused(self, fg: FusedGemm, invals):
         from repro.kernels import ops as kernel_ops
+        knobs = self._gemm_knobs()
         if fg.kind == "prologue":
             x, scale, w = invals
+            knobs.pop("autotune")  # rmsnorm_gemm has no measured search
             out = kernel_ops.rmsnorm_gemm(x, scale, w, epilogue=fg.epilogue,
-                                          eps=fg.eps, backend=self.backend,
-                                          interpret=self.interpret,
-                                          precision=fg.precision)
+                                          eps=fg.eps,
+                                          precision=fg.precision
+                                          or self.options.precision,
+                                          **knobs)
         else:
             a, b = invals[:2]
             bias = invals[2] if fg.has_bias else None
             accum = fg.preferred_element_type \
                 or jnp.promote_types(a.dtype, jnp.float32)
             out = kernel_ops.sma_gemm(a, b, bias=bias, epilogue=fg.epilogue,
-                                      backend=self.backend,
-                                      interpret=self.interpret,
                                       accum_dtype=jnp.dtype(accum),
-                                      precision=fg.precision)
+                                      precision=fg.precision
+                                      or self.options.precision,
+                                      **knobs)
         if out.dtype != fg.out_aval.dtype:
             out = out.astype(fg.out_aval.dtype)
         return out
@@ -235,14 +250,16 @@ class _Interpreter:
 
 
 # --------------------------------------------------------------------------
-# compile_model: the front door
+# compile_with_options: the canonical pipeline (Engine calls this)
 # --------------------------------------------------------------------------
 @dataclasses.dataclass
 class CompiledModel:
-    """Plan + executable returned by :func:`compile_model`.
+    """Plan + executable for ONE abstract signature.
 
-    Calling it with the same pytree structure as the example arguments runs
-    the planned program with systolic groups dispatched to the SMA kernels.
+    Produced by :func:`compile_with_options` (via ``repro.sma_jit`` /
+    ``Engine``, which caches one of these per signature).  Calling it with
+    the same pytree structure as the example arguments runs the planned
+    program with systolic groups dispatched to the SMA kernels.
     """
 
     traced: TracedModel
@@ -250,6 +267,7 @@ class CompiledModel:
     report: Dict[str, Any]
     _runner: Callable
     rewritten: Optional[RewriteResult] = None
+    options: Optional[SMAOptions] = None
 
     @property
     def name(self) -> str:
@@ -277,44 +295,99 @@ class CompiledModel:
         return jax.tree_util.tree_unflatten(self.traced.out_tree, outs)
 
 
-def compile_model(fn: Callable, *args, name: Optional[str] = None,
-                  policy: Optional[SMAPolicy] = None,
-                  backend: Optional[str] = None, interpret: bool = False,
-                  max_scan_unroll: int = 8, jit: bool = False,
-                  fuse_runtime: bool = True,
-                  **kwargs) -> CompiledModel:
+def _flat_donate_indices(args, kwargs, donate_argnums) -> tuple:
+    """Map user-level donated positional argnums to flattened leaf indices
+    (the runner's calling convention).  Keyword arguments flatten after the
+    positionals and are never donated."""
+    donate = set(donate_argnums)
+    idx, out = 0, []
+    for i, a in enumerate(args):
+        n = len(jax.tree_util.tree_leaves(a))
+        if i in donate:
+            out.extend(range(idx, idx + n))
+        idx += n
+    return tuple(out)
+
+
+def compile_with_options(fn: Callable, *args, name: Optional[str] = None,
+                         options: Optional[SMAOptions] = None,
+                         **kwargs) -> CompiledModel:
     """Trace → lower → plan → rewrite → wrap a dispatching executable.
 
-    Parameters mirror the framework-wide kernel contract: ``backend`` is one
-    of ``None`` (auto: pallas on TPU, xla elsewhere), ``"pallas"``,
-    ``"interpret"``, ``"xla"``; ``interpret=True`` forces the Pallas
-    interpreter (CPU kernel-logic validation).  ``args``/``kwargs`` may be
+    The canonical compile pipeline: every configuration knob comes from ONE
+    :class:`repro.api.options.SMAOptions` (explicit ``options`` overlaid on
+    the ambient ``repro.options(...)`` context).  ``args``/``kwargs`` may be
     real arrays or ``jax.ShapeDtypeStruct`` placeholders; execution of the
     returned callable of course needs real arrays.
 
-    ``fuse_runtime=False`` disables the fusion-rewrite pass (every GEMM
-    dispatches bare) — the spatially-decoupled baseline for A/B timing.
+    Callers normally do not use this directly — ``repro.sma_jit`` wraps it
+    with the shape-polymorphic compile cache.
     """
+    o = resolve_options(options)
     traced = trace_model(fn, *args, name=name, **kwargs)
     program = lower_jaxpr(traced.closed_jaxpr,
-                          max_scan_unroll=max_scan_unroll)
+                          max_scan_unroll=o.max_scan_unroll)
+    policy = o.policy if o.policy is not None else SMAPolicy(
+        fuse_epilogues=bool(o.fuse_epilogues),
+        max_epilogue_ops=o.max_epilogue_ops)
     plan = plan_program(program, name=traced.name, policy=policy)
-    rewritten = rewrite_program(traced.jaxpr) if fuse_runtime else None
+    rewritten = rewrite_program(traced.jaxpr) if o.fuse_runtime else None
 
-    interp = _Interpreter(backend, interpret, rewritten)
+    interp = _Interpreter(o, rewritten)
 
     def runner(*flat):
         return interp.eval_closed(traced.closed_jaxpr, flat)
 
-    if jit:
-        runner = jax.jit(runner)
+    if o.jit:
+        donate = _flat_donate_indices(args, kwargs, o.donate_argnums) \
+            if o.donate_argnums else ()
+        runner = jax.jit(runner, donate_argnums=donate)
 
     report = plan_report(plan)
+    report["options"] = o.asdict()
     report["dispatch"] = {
-        "backend": backend or "auto",
-        "interpret": interpret,
+        "backend": o.backend or "auto",
+        "interpret": bool(o.interpret),
         **count_dispatch_sites(traced.jaxpr),
     }
     report["fusion"] = fusion_section(plan, rewritten)
     return CompiledModel(traced=traced, plan=plan, report=report,
-                         _runner=runner, rewritten=rewritten)
+                         _runner=runner, rewritten=rewritten, options=o)
+
+
+#: Sentinel distinguishing "kwarg omitted" (inherit from ambient options)
+#: from an explicitly-passed falsy value (which must win over the context).
+_UNSET: Any = object()
+
+
+def compile_model(fn: Callable, *args, name: Optional[str] = None,
+                  policy: Optional[SMAPolicy] = None,
+                  backend: Optional[str] = None, interpret: Any = _UNSET,
+                  max_scan_unroll: Any = _UNSET, jit: Any = _UNSET,
+                  fuse_runtime: Any = _UNSET,
+                  **kwargs) -> CompiledModel:
+    """DEPRECATED single-signature front door (one release of back-compat).
+
+    Use ``repro.sma_jit(fn, options=SMAOptions(...))`` instead — it compiles
+    the same pipeline but caches executables per abstract signature, so
+    repeated calls (serving!) skip trace/plan/rewrite.  This wrapper builds
+    a one-shot :class:`repro.api.engine.Engine`, compiles the given example
+    signature through it, and returns the cached :class:`CompiledModel`.
+    """
+    warnings.warn(
+        "compiler.compile_model is deprecated; use repro.sma_jit(fn, "
+        "options=repro.SMAOptions(...)) — the engine caches compiled "
+        "executables per abstract signature instead of re-tracing per call",
+        DeprecationWarning, stacklevel=2)
+    from repro.api.engine import Engine
+    legacy = SMAOptions(
+        backend=backend,
+        interpret=None if interpret is _UNSET else interpret,
+        max_scan_unroll=None if max_scan_unroll is _UNSET
+        else max_scan_unroll,
+        jit=None if jit is _UNSET else jit,
+        fuse_runtime=None if fuse_runtime is _UNSET else fuse_runtime,
+        policy=policy,
+    )
+    engine = Engine(fn, options=legacy, name=name)
+    return engine.compile(*args, **kwargs)

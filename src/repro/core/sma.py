@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Callable, List, Optional, Sequence
 
 import jax
@@ -157,39 +158,30 @@ def sma_matmul(a: jax.Array, b: jax.Array, *,
                epilogue: str = "none",
                bias: Optional[jax.Array] = None,
                backend: Optional[str] = None,
-               interpret: bool = False,
+               interpret: Optional[bool] = None,
                accum_dtype: jnp.dtype = jnp.float32,
+               precision=None,
                block_m: Optional[int] = None,
                block_n: Optional[int] = None,
                block_k: Optional[int] = None) -> jax.Array:
     """``C = epilogue(A @ B + bias)`` in systolic mode with a fused epilogue.
 
-    The single-kernel fusion (GEMM + bias + activation) is the SMA temporal
-    integration: the SIMD-mode epilogue runs on the VPU while the C tile is
-    still resident in VMEM, exactly as the paper's SIMD lanes post-process the
-    systolic array's RF-resident output with zero reconfiguration cost.
-
-    ``backend='xla'`` lowers to ``jax.lax.dot_general`` + fused elementwise —
-    semantically identical, used for CPU dry-runs (XLA fuses the epilogue into
-    its own GEMM loop, so the accounting stays representative).
-
-    ``block_m``/``block_n``/``block_k`` tile the kernel backends; ``None``
-    defers to the shape-aware table in :mod:`repro.kernels.autotune`, so the
-    LSMA entry point and the compiler share one tuning surface.  The XLA path
-    ignores them (XLA picks its own tiling).
+    DEPRECATED thin shim over :func:`repro.kernels.ops.sma_gemm` (one
+    release of back-compat): the per-call ``backend``/``interpret``/
+    ``block_*`` knobs duplicated the framework configuration, which now
+    lives in ONE place — :class:`repro.api.options.SMAOptions` (set an
+    ambient scope with ``repro.options(...)``, or pass ``options=`` to
+    ``repro.sma_jit``).  Knobs left unset here resolve from that ambient
+    configuration; explicit arguments still win, exactly as before.
     """
-    backend = backend or default_backend()
-    if backend == "pallas" or interpret:
-        from repro.kernels import ops as kernel_ops  # defer: optional dep cycle
-        return kernel_ops.sma_gemm(a, b, bias=bias, epilogue=epilogue,
-                                   backend=backend, interpret=interpret,
-                                   accum_dtype=accum_dtype,
-                                   block_m=block_m, block_n=block_n,
-                                   block_k=block_k)
-    out = jax.lax.dot_general(
-        a, b, (((a.ndim - 1,), (0,)), ((), ())),
-        preferred_element_type=accum_dtype)
-    if bias is not None:
-        out = out + bias.astype(out.dtype)
-    out = EPILOGUES[epilogue](out)
-    return out.astype(a.dtype)
+    warnings.warn(
+        "core.sma.sma_matmul is deprecated; call kernels.ops.sma_gemm "
+        "(same arguments), or configure via repro.options(...) / "
+        "repro.sma_jit(options=...) — SMAOptions is the single "
+        "configuration path", DeprecationWarning, stacklevel=2)
+    from repro.kernels import ops as kernel_ops  # defer: optional dep cycle
+    return kernel_ops.sma_gemm(a, b, bias=bias, epilogue=epilogue,
+                               backend=backend, interpret=interpret,
+                               accum_dtype=accum_dtype, precision=precision,
+                               block_m=block_m, block_n=block_n,
+                               block_k=block_k)

@@ -27,6 +27,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.api.options import current_options
 from repro.distributed.sharding import shard as _shard
 from repro.kernels import ref as _ref
 
@@ -37,22 +38,59 @@ def _resolve(backend: Optional[str]) -> str:
     return backend
 
 
+def _gemm_ambient(backend, interpret, precision=None, block_m=None,
+                  block_n=None, block_k=None, autotune=False):
+    """One-read resolution of every kernel knob left unset (``None``)
+    against the ambient ``repro.options`` context — the single
+    configuration path (explicit kwargs still win).
+
+    Resolution happens when the call executes, i.e. at trace time if the
+    caller is inside ``jax.jit``: the resolved knobs are baked into that
+    trace, and later calls hitting jit's cache will NOT see a changed
+    ambient context (``sma_jit`` avoids this by keying its cache on the
+    resolved options).
+    """
+    o = current_options()
+    return (
+        o.backend if backend is None else backend,
+        bool(o.interpret) if interpret is None else interpret,
+        o.precision if precision is None else precision,
+        o.block_m if block_m is None else block_m,
+        o.block_n if block_n is None else block_n,
+        o.block_k if block_k is None else block_k,
+        bool(o.autotune) if autotune is None else autotune,
+    )
+
+
+def _ambient(backend: Optional[str], interpret: Optional[bool]
+             ) -> Tuple[Optional[str], bool]:
+    """Backend/interpret-only view of :func:`_gemm_ambient` (the non-GEMM
+    entry points have no block/precision/autotune knobs)."""
+    return _gemm_ambient(backend, interpret)[:2]
+
+
 def sma_gemm(a: jax.Array, b: jax.Array, *,
              bias: Optional[jax.Array] = None,
              epilogue: str = "none",
              backend: Optional[str] = None,
-             interpret: bool = False,
+             interpret: Optional[bool] = None,
              accum_dtype: jnp.dtype = jnp.float32,
              precision=None,
              block_m: Optional[int] = None, block_n: Optional[int] = None,
              block_k: Optional[int] = None,
-             autotune: bool = False) -> jax.Array:
+             autotune: Optional[bool] = None) -> jax.Array:
     """Fused GEMM + bias + activation (the LSMA macro-op).
 
-    ``block_*=None`` resolves shape-aware blocks from
+    Every knob left unset (``None``) resolves from the ambient
+    :func:`repro.api.options.current_options` — this entry point is a thin
+    shim over the framework-wide :class:`SMAOptions` configuration path.
+    ``block_*=None`` then falls back to the shape-aware table in
     :mod:`repro.kernels.autotune`; ``autotune=True`` additionally runs the
     measured search (cached per shape/dtype) on the kernel backends.
     """
+    (backend, interpret, precision, block_m, block_n, block_k,
+     autotune) = _gemm_ambient(backend, interpret, precision,
+                               block_m, block_n, block_k, autotune)
     backend = "interpret" if interpret else _resolve(backend)
     if backend == "xla":
         return _ref.gemm_ref(a, b, bias=bias, epilogue=epilogue,
@@ -77,11 +115,17 @@ def sma_gemm(a: jax.Array, b: jax.Array, *,
 def rmsnorm_gemm(x: jax.Array, scale: jax.Array, w: jax.Array, *,
                  epilogue: str = "none", eps: float = 1e-6,
                  backend: Optional[str] = None,
-                 interpret: bool = False,
+                 interpret: Optional[bool] = None,
                  precision=None,
                  block_m: Optional[int] = None, block_n: Optional[int] = None,
                  block_k: Optional[int] = None) -> jax.Array:
-    """Fused SIMD-prologue norm + systolic GEMM (SMA prologue fusion)."""
+    """Fused SIMD-prologue norm + systolic GEMM (SMA prologue fusion).
+
+    Unset knobs resolve from the ambient options, as in :func:`sma_gemm`.
+    """
+    (backend, interpret, precision, block_m, block_n, block_k,
+     _) = _gemm_ambient(backend, interpret, precision,
+                        block_m, block_n, block_k)
     backend = "interpret" if interpret else _resolve(backend)
     if backend == "xla":
         return _ref.rmsnorm_gemm_ref(x, scale, w, epilogue=epilogue, eps=eps,
@@ -96,11 +140,12 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: Optional[int] = None,
                     scale: Optional[float] = None,
                     backend: Optional[str] = None,
-                    interpret: bool = False,
+                    interpret: Optional[bool] = None,
                     block_q: int = 256, block_kv: int = 512,
                     unroll: bool = False,
                     xla_chunk: int = 1024) -> jax.Array:
     """Online-softmax attention (train/prefill)."""
+    backend, interpret = _ambient(backend, interpret)
     backend = "interpret" if interpret else _resolve(backend)
     if backend == "xla":
         return _chunked_mha_xla(q, k, v, causal=causal, window=window,
@@ -115,9 +160,10 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      cache_len: jax.Array, *,
                      scale: Optional[float] = None,
                      backend: Optional[str] = None,
-                     interpret: bool = False,
+                     interpret: Optional[bool] = None,
                      block_s: int = 512) -> jax.Array:
     """Single-token GQA attention over a KV cache (decode)."""
+    backend, interpret = _ambient(backend, interpret)
     backend = "interpret" if interpret else _resolve(backend)
     if backend == "xla":
         return _ref.decode_attention_ref(q, k_cache, v_cache, cache_len,
@@ -130,10 +176,11 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 def rglru_scan(a: jax.Array, u: jax.Array,
                h0: Optional[jax.Array] = None, *,
                backend: Optional[str] = None,
-               interpret: bool = False,
+               interpret: Optional[bool] = None,
                block_s: int = 256, block_d: int = 256,
                ) -> Tuple[jax.Array, jax.Array]:
     """Gated linear recurrence h_t = a_t h_{t-1} + u_t (RG-LRU core)."""
+    backend, interpret = _ambient(backend, interpret)
     backend = "interpret" if interpret else _resolve(backend)
     if backend == "xla":
         return _assoc_rglru_xla(a, u, h0)
@@ -146,7 +193,7 @@ def mlstm_chunkwise(q: jax.Array, k: jax.Array, v: jax.Array,
                     log_f: jax.Array, log_i: jax.Array, *,
                     chunk: int = 128,
                     backend: Optional[str] = None,
-                    interpret: bool = False,
+                    interpret: Optional[bool] = None,
                     unroll: bool = False,
                     return_state: bool = False):
     """Chunkwise-parallel mLSTM (xLSTM matrix memory).
@@ -154,6 +201,7 @@ def mlstm_chunkwise(q: jax.Array, k: jax.Array, v: jax.Array,
     ``return_state=True`` additionally returns the final (C, n, m) state —
     the prefill path for xLSTM serving.
     """
+    backend, interpret = _ambient(backend, interpret)
     backend = "interpret" if interpret else _resolve(backend)
     if backend == "xla":
         return _mlstm_chunkwise_xla(q, k, v, log_f, log_i, chunk=chunk,

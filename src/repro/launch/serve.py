@@ -6,6 +6,13 @@ decode path (every family also supports batched ``lm.prefill``; the tests
 assert the two agree); every engine tick decodes one token for all active
 slots.  Greedy or temperature sampling.
 
+The decode step runs through ``repro.sma_jit``: ONE engine serves every
+slot and every tick — the first call compiles (trace → plan → rewrite →
+dispatch, plus XLA jit), every subsequent warmup step and tick with the
+same abstract signature is a cache hit with zero re-trace/re-plan work.
+``Server.engine.stats`` exposes the hit/miss counters the system tests
+assert on.
+
 This is the serving analogue of the paper's end-to-end story: the decode
 step's per-request variable lengths and sampling are SIMD-mode work riding
 the same program as the systolic projections.
@@ -21,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import SMAOptions, sma_jit
 from repro.configs.base import ModelConfig, get_config, reduced
 from repro.models import lm
 from repro.models.layers import Runtime
@@ -51,8 +59,16 @@ class Server:
         self.state = lm.init_state(cfg, slots, cache_size)
         self.cache_len = jnp.zeros((slots,), jnp.int32)
         self.active: Dict[int, Request] = {}
-        self._decode = jax.jit(
-            lambda p, s, cl, b: lm.decode_step(p, s, cl, cfg, self.rt, b))
+        # The single decode entry point: warmup and tick share this engine,
+        # so after the first call every step is a compile-cache hit (the
+        # engine would also transparently handle new signatures, e.g. a
+        # multi-token speculative batch, by compiling them once).
+        self.engine = sma_jit(
+            lambda p, s, cl, b: lm.decode_step(p, s, cl, cfg, self.rt, b),
+            options=SMAOptions(backend=self.rt.backend,
+                               interpret=self.rt.interpret,
+                               jit=True),
+            name=f"{cfg.name}.decode_step")
 
     # ------------------------------------------------------------------ slots
     def free_slots(self) -> List[int]:
@@ -97,7 +113,12 @@ class Server:
         return {"tokens": toks}
 
     def _step_slotwise(self, slot, batch):
-        logits, new_state, new_len = self._decode(
+        """One decode step that only advances ``slot`` (admission warmup).
+
+        Routed through the SAME engine cache as :meth:`tick` — the batch
+        signature is identical, so per-slot warmup never re-traces.
+        """
+        logits, new_state, new_len = self.engine(
             self.params, self.state, self.cache_len, batch)
         # only the admitted slot advances during warmup
         keep = jnp.arange(self.slots) == slot
@@ -123,7 +144,7 @@ class Server:
             if self.cfg.input_mode != "embeds" else \
             {"embeds": jnp.zeros((self.slots, 1, self.cfg.d_model),
                                  self.cfg.activation_dtype)}
-        logits, self.state, self.cache_len = self._decode(
+        logits, self.state, self.cache_len = self.engine(
             self.params, self.state, self.cache_len, batch)
         out: Dict[int, int] = {}
         logits = np.asarray(logits, np.float32)
@@ -179,6 +200,10 @@ def main() -> None:
     dt = time.time() - t0
     print(f"[serve] {args.requests} requests, {ticks} engine ticks, "
           f"{dt:.2f}s ({ticks / dt:.1f} ticks/s)")
+    st = server.engine.stats
+    print(f"[serve] engine cache: {st.hits} hits / {st.misses} compiles, "
+          f"compile {st.compile_time_s:.2f}s "
+          f"({st.amortized_compile_s * 1e3:.2f} ms/call amortized)")
 
 
 if __name__ == "__main__":

@@ -23,6 +23,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.api import SMAOptions, sma_jit
 from repro.configs.base import ModelConfig, get_config, reduced
 from repro.data.pipeline import DataConfig, DataPipeline, PipelineState
 from repro.distributed.sharding import rules_for, use_rules
@@ -53,6 +54,15 @@ class TrainLoopConfig:
 
 def make_step(cfg: ModelConfig, rt: Runtime, ocfg: adamw.AdamWConfig,
               rules, mesh_axes, *, grad_compression: bool):
+    """Build the train step on the ``sma_jit`` front door.
+
+    The engine traces the full fwd+bwd+optimizer program through the SMA
+    compiler (systolic GEMMs — including the backward-pass projections —
+    dispatch via ``sma_gemm``), jits the dispatched executable, and caches
+    it per abstract signature: step 2..N are pure cache hits, and a
+    seq-len/batch change (curriculum schedules) compiles once instead of
+    silently re-tracing every step.
+    """
     def step(params, opt_state, ef, batch):
         with use_rules(rules, mesh_axes):
             (loss, metrics), grads = jax.value_and_grad(
@@ -63,7 +73,13 @@ def make_step(cfg: ModelConfig, rt: Runtime, ocfg: adamw.AdamWConfig,
                                                  ocfg)
         return params, opt_state, ef, {**metrics, **om}
 
-    return jax.jit(step, donate_argnums=(0, 1, 2))
+    # donate params/opt_state/ef so XLA updates them in place (same peak
+    # memory as the pre-engine jax.jit(step, donate_argnums=(0, 1, 2))).
+    return sma_jit(step,
+                   options=SMAOptions(backend=rt.backend,
+                                      interpret=rt.interpret,
+                                      jit=True, donate_argnums=(0, 1, 2)),
+                   name=f"{cfg.name}.train_step")
 
 
 def train(cfg: ModelConfig, loop: TrainLoopConfig,
@@ -125,12 +141,14 @@ def train(cfg: ModelConfig, loop: TrainLoopConfig,
             if mgr is not None:
                 mgr.wait()
             print(f"[train] simulated fault: halted at step {i + 1}")
-            return {"history": history, "params": params}
+            return {"history": history, "params": params,
+                    "engine": step_fn.stats.asdict()}
     if mgr is not None:
         mgr.save(loop.steps, {"params": params, "opt": opt_state, "ef": ef,
                               "data": pipe.state.to_dict()})
         mgr.wait()
-    return {"history": history, "params": params}
+    return {"history": history, "params": params,
+            "engine": step_fn.stats.asdict()}
 
 
 def main() -> None:
