@@ -27,7 +27,7 @@ def family_report(arch: str, *, seq_len: int = 512, batch: int = 1,
     cfg = C.get_config(arch)
     if reduced:
         cfg = C.reduced(cfg)
-    rt = Runtime(backend="xla", remat=False)
+    rt = Runtime(remat=False)
 
     s = max(seq_len, cfg.num_vision_tokens + 64)
     if cfg.input_mode == "tokens":
@@ -47,6 +47,7 @@ def family_report(arch: str, *, seq_len: int = 512, batch: int = 1,
     p_shapes = jax.eval_shape(lambda k: lm.init(k, cfg)[0],
                               jax.random.PRNGKey(0))
     engine = repro.sma_jit(lambda p, b: lm.forward(p, cfg, rt, b),
+                           options=repro.SMAOptions(backend="xla"),
                            name=cfg.name)
     compiled = engine.compile(p_shapes, batch_shapes)
     report = compiled.report

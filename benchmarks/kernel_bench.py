@@ -16,6 +16,7 @@ from typing import List, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.backends import xla_backend
 from repro.core.modes import Op, OpKind
 from repro.core.sma import SMAPolicy
 from repro.kernels import ops, ref
@@ -41,7 +42,7 @@ def attention_paths() -> List[Row]:
     v = jax.random.normal(k0, (b, hkv, s, d), jnp.float32)
 
     naive = jax.jit(lambda q, k, v: ref.mha_ref(q, k, v, causal=True))
-    flash = jax.jit(lambda q, k, v: ops._chunked_mha_xla(
+    flash = jax.jit(lambda q, k, v: xla_backend.chunked_mha(
         q, k, v, causal=True, window=None, scale=None, chunk=512))
     t_naive = _time(naive, q, k, v)
     t_flash = _time(flash, q, k, v)
@@ -78,7 +79,7 @@ def mlstm_paths() -> List[Row]:
     li = jax.random.normal(ks[4], (b, h, s)) * 0.5
 
     seq = jax.jit(lambda *a: ref.mlstm_ref(*a))
-    chunk = jax.jit(lambda *a: ops._mlstm_chunkwise_xla(*a, chunk=128))
+    chunk = jax.jit(lambda *a: xla_backend.mlstm_chunkwise(*a, chunk=128))
     t_seq = _time(seq, q, k, v, lf, li, iters=2)
     t_chunk = _time(chunk, q, k, v, lf, li, iters=2)
     return [
@@ -211,6 +212,42 @@ def engine_paths() -> List[Row]:
     return rows
 
 
+def backend_paths() -> List[Row]:
+    """One decode-MLP-shaped GEMM, timed per *registered backend*.
+
+    Rows are emitted for every backend in the registry that passes its
+    capability check for this site — on a CPU host that is ``xla`` and
+    ``interpret`` (the latter being the Pallas kernel rows, which on TPU
+    become the ``pallas`` rows); on TPU the ``pallas`` row appears too.
+    ``--bench-check`` gates these rows against the committed
+    ``BENCH_kernels.json`` baseline, so a silent slowdown of the kernel
+    backends (e.g. a bad default block table) trips CI.  ``derived`` is the
+    speed relative to the ``xla`` reference row.
+    """
+    from repro.backends import OpSite, available_backends, get_backend
+
+    m, k, n = 8, 256, 1024
+    key = jax.random.PRNGKey(11)
+    x = jax.random.normal(key, (m, k), jnp.float32)
+    w = jax.random.normal(key, (k, n), jnp.float32) * k ** -0.5
+    site = OpSite.from_args("sma_gemm", (x, w))
+
+    timed = {}
+    for name in available_backends():
+        if get_backend(name).supports(site) is not True:
+            continue  # e.g. pallas on a CPU host — recorded as absent
+        fn = jax.jit(functools.partial(ops.sma_gemm, backend=name))
+        t = float("inf")
+        for _ in range(6):
+            t = min(t, _time_latency(fn, x, w, iters=20))
+        timed[name] = t
+    t_ref = timed.get("xla")
+    tag = f"m{m}k{k}n{n}"
+    return [(f"backend.sma_gemm.{tag}.{name}", t,
+             (t_ref / t) if t_ref else 1.0)
+            for name, t in sorted(timed.items())]
+
+
 def fusion_accounting() -> List[Row]:
     """SMA temporal-fusion savings on one LM block (HBM bytes avoided)."""
     b, s, d, ff, h = 16, 4096, 4096, 14336, 32
@@ -253,6 +290,7 @@ def smoke_rows() -> List[Row]:
     rows: List[Row] = []
     rows += gemm_chain_paths()
     rows += engine_paths()
+    rows += backend_paths()
     rows += fusion_accounting()
     return rows
 
@@ -264,5 +302,6 @@ def all_rows() -> List[Row]:
     rows += mlstm_paths()
     rows += gemm_chain_paths()
     rows += engine_paths()
+    rows += backend_paths()
     rows += fusion_accounting()
     return rows

@@ -52,6 +52,42 @@ def check_chain_rows(rows, *, slack: float = 1.25) -> int:
     return bad
 
 
+def check_backend_rows(rows, baseline_path: str, *, slack: float = 3.0
+                       ) -> int:
+    """Gate the per-backend kernel rows against the *committed* baseline.
+
+    The ``backend.<op>.<shape>.<name>`` rows time each registered backend on
+    one fixed GEMM site.  Unlike the paired fused/cached checks (measured
+    interleaved in one process), this compares across runs/hosts, so the
+    slack is very coarse — it exists to trip on a pathological kernel-path
+    regression (the ``interpret`` row IS the Pallas kernel logic on CPU CI;
+    on TPU the ``pallas`` row joins it), not to resolve small drift.  Rows
+    present on only one side (e.g. ``pallas`` appearing once CI gains a TPU
+    leg) are skipped.  Returns the number of violations.
+    """
+    try:
+        with open(baseline_path) as f:
+            baseline = {r["name"]: r["us_per_call"]
+                        for r in json.load(f).get("rows", [])}
+    except (OSError, ValueError):
+        print(f"# no committed baseline at {baseline_path}; "
+              f"backend rows not gated")
+        return 0
+    bad = 0
+    for name, us, _ in rows:
+        if not name.startswith("backend."):
+            continue
+        base = baseline.get(name)
+        if base is None:
+            print(f"# check {name}: no baseline row (new backend) -> ok")
+            continue
+        ok = us <= base * slack
+        print(f"# check {name}: {us:.1f}us vs committed {base:.1f}us "
+              f"(slack x{slack}) -> {'ok' if ok else 'REGRESSION'}")
+        bad += 0 if ok else 1
+    return bad
+
+
 def write_bench_json(path: str, *, full: bool = False,
                      check: bool = False) -> None:
     """Run the kernel benches and write ``{schema, meta, rows}`` JSON."""
@@ -60,6 +96,7 @@ def write_bench_json(path: str, *, full: bool = False,
     from benchmarks import kernel_bench
 
     rows = kernel_bench.all_rows() if full else kernel_bench.smoke_rows()
+    baseline_violations = check_backend_rows(rows, path) if check else 0
     payload = {
         "schema": 1,
         "meta": {
@@ -78,8 +115,10 @@ def write_bench_json(path: str, *, full: bool = False,
     for name, us, derived in rows:
         print(f"{name},{us:.3f},{derived:.4f}")
     print(f"# wrote {len(rows)} rows -> {path}")
-    if check and check_chain_rows(rows):
-        raise SystemExit("fused chain slower than unfused baseline")
+    if check and (check_chain_rows(rows) or baseline_violations):
+        raise SystemExit("bench check failed: fused chain slower than "
+                         "unfused, cached slower than percall, or a "
+                         "backend row regressed vs the committed baseline")
 
 
 def main() -> None:

@@ -115,15 +115,16 @@ print("=" * 70)
 cfg = C.reduced(C.get_config("qwen3-moe-30b-a3b"))
 print(f"arch: {cfg.name} ({cfg.num_layers} layers, "
       f"{cfg.moe.num_experts} experts top-{cfg.moe.top_k})")
-rt = Runtime(backend="xla", remat=True)
+rt = Runtime(remat=True)   # backend comes from repro.options below
 params, _ = lm.init(key, cfg)
 opt = adamw.init(params)
 batch = {
     "tokens": jax.random.randint(key, (2, 64), 0, cfg.vocab_size),
     "labels": jax.random.randint(key, (2, 64), 0, cfg.vocab_size),
 }
-(loss, metrics), grads = jax.value_and_grad(
-    lambda p: lm.loss_fn(p, cfg, rt, batch), has_aux=True)(params)
+with repro.options(backend="xla"):   # pure SIMD-substrate step on CPU
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: lm.loss_fn(p, cfg, rt, batch), has_aux=True)(params)
 params, opt, om = adamw.update(grads, opt, params, adamw.AdamWConfig())
 print(f"loss={float(loss):.4f}  moe_lb_loss={float(metrics['moe_lb_loss']):.5f}"
       f"  grad_norm={float(om['grad_norm']):.3f}")

@@ -11,6 +11,7 @@ import time
 
 import numpy as np
 
+import repro
 import repro.configs as C
 from repro.data.pipeline import DataConfig, make_batch, _bigram_params
 from repro.launch.serve import Request, Server
@@ -22,11 +23,17 @@ cfg = dataclasses.replace(
     num_groups=2, d_model=128, num_heads=4, num_kv_heads=4, head_dim=32,
     d_ff=256, vocab_size=256, dtype="float32", param_dtype="float32")
 print("[serve_lm] training a small model first (60 steps)...")
-out = train(cfg, TrainLoopConfig(steps=60, seq_len=64, global_batch=8,
-                                 log_every=30, peak_lr=3e-3))
+# Backend selection goes through the one configuration path: an explicit
+# SMAOptions overlay for the server engine, and (equivalently) an ambient
+# repro.options(...) scope for the trainer.  (Runtime(backend=...) is a
+# deprecated shim.)
+with repro.options(backend="xla"):
+    out = train(cfg, TrainLoopConfig(steps=60, seq_len=64, global_batch=8,
+                                     log_every=30, peak_lr=3e-3))
 params = out["params"]
 
-server = Server(cfg, params, slots=4, cache_size=96)
+server = Server(cfg, params, slots=4, cache_size=96,
+                options=repro.SMAOptions(backend="xla"))
 # the trainer's data pipeline keys the bigram map off the *loop* seed (0)
 a, c = _bigram_params(0, cfg.vocab_size)
 rng = np.random.RandomState(0)

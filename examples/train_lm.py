@@ -14,6 +14,7 @@ Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300] [--preset 10m]
 import argparse
 import dataclasses
 
+import repro
 import repro.configs as C
 from repro.launch.train import TrainLoopConfig, train
 
@@ -45,10 +46,15 @@ def main() -> None:
     n_params = cfg.param_count()
     print(f"[example] {cfg.name}: ~{n_params/1e6:.1f}M params, "
           f"{layers} layers, seq {seq}, batch {batch}")
-    out = train(cfg, TrainLoopConfig(
-        steps=args.steps, seq_len=seq, global_batch=batch, log_every=20,
-        checkpoint_dir=args.checkpoint_dir, checkpoint_every=100,
-        grad_compression=args.grad_compression, peak_lr=1e-3))
+    # One configuration path: the ambient repro.options(...) scope routes
+    # every kernel site through the registered "xla" (SIMD-mode) backend on
+    # this CPU host.  (Previously this rode the now-deprecated
+    # Runtime(backend=...) knob.)
+    with repro.options(backend="xla"):
+        out = train(cfg, TrainLoopConfig(
+            steps=args.steps, seq_len=seq, global_batch=batch, log_every=20,
+            checkpoint_dir=args.checkpoint_dir, checkpoint_every=100,
+            grad_compression=args.grad_compression, peak_lr=1e-3))
     first, last = out["history"][0], out["history"][-1]
     print(f"[example] loss {first['loss']:.3f} -> {last['loss']:.3f} "
           f"(accuracy {last['accuracy']:.3f}) in {last['wall_s']}s")

@@ -11,9 +11,13 @@ Public API (the single front door)::
     with repro.options(backend="interpret", autotune=False):
         ...                          # scoped configuration overlay
 
+    repro.backends.register_backend(...)   # plug in a new executor; then
+    with repro.options(backend="mine"):    # it is selectable everywhere
+        ...
+
 Subsystems live in subpackages (``repro.compiler``, ``repro.kernels``,
-``repro.models``, ``repro.core``, ...).  Imports here are lazy (PEP 562) so
-``import repro.configs`` and friends stay light.
+``repro.backends``, ``repro.models``, ``repro.core``, ...).  Imports here
+are lazy (PEP 562) so ``import repro.configs`` and friends stay light.
 """
 from typing import Any
 
@@ -24,16 +28,18 @@ _API_EXPORTS = {
     "SMAOptions", "options", "current_options", "resolve_options",
 }
 
-__all__ = sorted(_API_EXPORTS) + ["compiler"]
+_SUBPACKAGES = ("compiler", "backends")
+
+__all__ = sorted(_API_EXPORTS) + list(_SUBPACKAGES)
 
 
 def __getattr__(name: str) -> Any:
     if name in _API_EXPORTS:
         import repro.api as _api
         return getattr(_api, name)
-    if name == "compiler":
-        import repro.compiler as _compiler
-        return _compiler
+    if name in _SUBPACKAGES:
+        import importlib
+        return importlib.import_module(f"repro.{name}")
     raise AttributeError(f"module 'repro' has no attribute {name!r}")
 
 

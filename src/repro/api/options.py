@@ -37,7 +37,8 @@ from __future__ import annotations
 import contextlib
 import contextvars
 import dataclasses
-from typing import Any, Iterator, Optional, Tuple
+import os
+from typing import Any, Iterator, Optional, Tuple, Union
 
 __all__ = ["SMAOptions", "options", "current_options", "resolve_options",
            "DEFAULTS"]
@@ -55,8 +56,13 @@ class SMAOptions:
     Fields (grouped by the stage that consumes them):
 
     dispatch / kernels
-      * ``backend`` — ``"pallas"`` | ``"interpret"`` | ``"xla"`` | ``"auto"``
-        (auto: pallas on TPU, xla elsewhere).
+      * ``backend`` — the name of any backend registered with
+        :func:`repro.backends.register_backend` (built-ins: ``"pallas"`` |
+        ``"interpret"`` | ``"xla"``), an ordered tuple/list of names (an
+        explicit preference ladder, e.g. ``("pallas", "xla")``), or
+        ``"auto"``/``None`` (the mode ladder: pallas where capable, xla
+        otherwise).  Resolution is capability-checked per op site; lists
+        normalize to tuples so options stay hashable.
       * ``interpret`` — force the Pallas interpreter (CPU kernel-logic runs).
       * ``autotune`` — measured block search on the kernel backends.
       * ``precision`` — forwarded to the GEMM contraction (``jax.lax``
@@ -83,7 +89,7 @@ class SMAOptions:
         Donated arguments are consumed: do not reuse them after the call.
     """
 
-    backend: Optional[str] = None
+    backend: Union[None, str, Tuple[str, ...]] = None
     interpret: Optional[bool] = None
     autotune: Optional[bool] = None
     precision: Any = None
@@ -97,6 +103,12 @@ class SMAOptions:
     block_n: Optional[int] = None
     block_k: Optional[int] = None
     policy: Any = None
+
+    def __post_init__(self) -> None:
+        # Keep the object hashable: a backend preference passed as a list
+        # (natural at call sites) normalizes to a tuple.
+        if isinstance(self.backend, list):
+            object.__setattr__(self, "backend", tuple(self.backend))
 
     _FIELDS = ("backend", "interpret", "autotune", "precision",
                "fuse_runtime", "fuse_epilogues", "max_epilogue_ops",
@@ -132,14 +144,28 @@ class SMAOptions:
                 v = type(v).__name__ if v is not None else None
             elif f == "precision" and v is not None:
                 v = str(v)
+            elif f == "backend" and isinstance(v, tuple):
+                v = list(v)
             out[f] = v
         return out
 
 
+def _env_backend() -> Union[None, str, Tuple[str, ...]]:
+    """Ambient backend default from ``REPRO_BACKEND`` (CI uses this to run
+    the whole suite under e.g. pure SIMD-mode ``xla``).  A comma-separated
+    value becomes an ordered preference ladder."""
+    raw = os.environ.get("REPRO_BACKEND", "").strip()
+    if not raw or raw == "auto":
+        return None
+    names = tuple(n.strip() for n in raw.split(",") if n.strip())
+    return names[0] if len(names) == 1 else names
+
+
 #: The framework-wide resolved defaults (``backend=None`` keeps its
-#: long-standing meaning: auto — pallas on TPU, xla elsewhere).
+#: long-standing meaning: auto — the capability-checked pallas→xla ladder,
+#: i.e. pallas where it can run, xla elsewhere).
 DEFAULTS = SMAOptions(
-    backend=None,
+    backend=_env_backend(),
     interpret=False,
     autotune=False,
     precision=None,

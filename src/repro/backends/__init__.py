@@ -1,0 +1,44 @@
+"""``repro.backends`` — the pluggable executor registry.
+
+One substrate, many executors: every kernel entry point in
+:mod:`repro.kernels.ops` and every GEMM the compiler dispatches resolves
+through this registry.  Three backends ship built-in —
+
+* ``pallas`` — compiled Pallas TPU kernels (systolic mode, the production
+  path),
+* ``interpret`` — the same kernels under the Pallas interpreter (any
+  platform; kernel-logic validation),
+* ``xla`` — pure-jnp reference paths compiled by XLA (SIMD mode; the
+  universal fallback and dry-run accounting path)
+
+— and new ones register in one call::
+
+    from repro.backends import Backend, register_backend
+    from repro.core.modes import ExecMode
+
+    register_backend(Backend("mine", ExecMode.SYSTOLIC,
+                             ops={"sma_gemm": my_gemm}))
+
+after which ``repro.options(backend="mine")`` (or ``backend=("mine",
+"xla")`` for an explicit fallback ladder) routes every matching op site
+through it, end-to-end through ``sma_jit`` — no per-op edits anywhere.
+"""
+from repro.backends.base import KERNEL_OPS, Backend, FallbackReason, OpSite
+from repro.backends.registry import (available_backends, get_backend,
+                                     normalize_preference, record_sites,
+                                     register_backend, select_backend,
+                                     unregister_backend)
+
+__all__ = [
+    "Backend",
+    "FallbackReason",
+    "OpSite",
+    "KERNEL_OPS",
+    "register_backend",
+    "unregister_backend",
+    "get_backend",
+    "available_backends",
+    "select_backend",
+    "normalize_preference",
+    "record_sites",
+]

@@ -1,0 +1,203 @@
+"""Backend protocol: the SMA substrate as an explicit, extensible API.
+
+The paper's architecture is one substrate exposing two execution modes —
+systolic for GEMM-shaped work, SIMD for everything else — with lightweight
+in-situ switching.  This module makes that substrate a first-class object:
+
+* :class:`Backend` — a named executor with an :class:`ExecMode` affinity, a
+  table of per-op implementations, and a :meth:`Backend.supports` capability
+  check over dtype / shape / platform.  ``supports`` returns ``True`` or a
+  :class:`FallbackReason` (falsy, carries *why*), so resolution can walk a
+  preference ladder and record every fallback — the runtime realization of
+  the paper's "route poorly-matched work to the flexible substrate" story.
+* :class:`OpSite` — the abstract description of one kernel call site (op
+  name, operand shapes/dtypes, platform, op-specific extras).  Capability
+  checks consume sites, never arrays, so resolution is identical at trace
+  time, at static plan time, and at runtime.
+
+Concrete registrants live in sibling modules (``pallas_backend``,
+``xla_backend``) and in user code — see ``register_backend`` in
+:mod:`repro.backends.registry`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, Optional, Tuple, Union
+
+from repro.core.modes import ExecMode
+
+__all__ = ["Backend", "FallbackReason", "OpSite", "KERNEL_OPS"]
+
+#: The framework's kernel entry points — the op names a backend may cover.
+#: (A backend covering a subset is fine: resolution falls through to the
+#: next backend on the preference ladder for uncovered ops.)
+KERNEL_OPS = (
+    "sma_gemm",
+    "rmsnorm_gemm",
+    "flash_attention",
+    "decode_attention",
+    "rglru_scan",
+    "mlstm_chunkwise",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class FallbackReason:
+    """Why a backend declined an op site.  Falsy, so capability checks read
+    naturally: ``if not backend.supports(site): ...``.
+
+    ``reason`` is ``"category:detail"`` — the category (``platform``,
+    ``dtype``, ``shape``, ``op``, ``param``) is what plan reports histogram
+    over; the detail is for humans.
+    """
+
+    reason: str
+
+    def __bool__(self) -> bool:
+        return False
+
+    def __str__(self) -> str:
+        return self.reason
+
+    @property
+    def category(self) -> str:
+        return self.reason.split(":", 1)[0]
+
+
+def _shape_dtype(x: Any) -> Tuple[Tuple[int, ...], str]:
+    """Shape/dtype of an array, tracer, or ShapeDtypeStruct."""
+    return tuple(getattr(x, "shape", ())), str(getattr(x, "dtype", ""))
+
+
+@dataclasses.dataclass(frozen=True)
+class OpSite:
+    """One abstract kernel call site, as capability checks see it.
+
+    Built from arrays *or* avals (tracers, ``ShapeDtypeStruct``) — only
+    shapes and dtypes are read, so the same site resolves identically during
+    tracing, during static plan walks, and at runtime.  ``extras`` carries
+    op-specific non-array parameters that affect capability (e.g. mLSTM's
+    ``return_state``).
+    """
+
+    op: str
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[str, ...]
+    platform: str
+    extras: Tuple[Tuple[str, Any], ...] = ()
+
+    @classmethod
+    def from_args(cls, op: str, args: Tuple[Any, ...], *,
+                  platform: Optional[str] = None,
+                  **extras: Any) -> "OpSite":
+        import jax
+        pairs = [_shape_dtype(a) for a in args if a is not None]
+        return cls(
+            op=op,
+            shapes=tuple(p[0] for p in pairs),
+            dtypes=tuple(p[1] for p in pairs),
+            platform=platform or jax.default_backend(),
+            extras=tuple(sorted(extras.items())),
+        )
+
+    def extra(self, name: str, default: Any = None) -> Any:
+        for k, v in self.extras:
+            if k == name:
+                return v
+        return default
+
+
+#: A per-op shape/param constraint: returns a reason string (category:detail)
+#: when the site is unsupported, else None.
+ConstraintFn = Callable[[OpSite], Optional[str]]
+
+
+class Backend:
+    """A named executor over (a subset of) the kernel entry points.
+
+    Parameters
+    ----------
+    name:
+        Registry key; also what ``SMAOptions.backend`` / the ``backend=``
+        kwarg select.
+    mode:
+        The backend's :class:`ExecMode` affinity — ``SYSTOLIC`` for
+        MXU/systolic-array kernel backends, ``SIMD`` for reference/vector
+        paths.  Plan reports reconcile this against the planner's temporal
+        mode schedule.
+    ops:
+        ``{op_name: callable}``.  Each callable takes the framework-wide
+        argument convention for that op (see :mod:`repro.kernels.ops`) and
+        may ignore knobs that do not apply to it.
+    platforms:
+        Platforms (``jax.default_backend()`` values) this backend can execute
+        on; ``None`` means any.
+    dtypes:
+        Supported operand dtypes (string names); ``None`` means any.
+    constraints:
+        Optional per-op :data:`ConstraintFn` shape/param checks, consulted by
+        :meth:`supports` after the dtype gate.
+    description:
+        One line for docs and plan reports.
+
+    Subclasses may instead override :meth:`supports` wholesale.
+    """
+
+    def __init__(self, name: str, mode: ExecMode, *,
+                 ops: Mapping[str, Callable[..., Any]],
+                 platforms: Optional[frozenset] = None,
+                 dtypes: Optional[frozenset] = None,
+                 constraints: Optional[Mapping[str, ConstraintFn]] = None,
+                 description: str = "") -> None:
+        self.name = name
+        self.mode = mode
+        self._ops = dict(ops)
+        self.platforms = platforms
+        self.dtypes = dtypes
+        self.constraints = dict(constraints or {})
+        self.description = description
+
+    # ----------------------------------------------------------- protocol
+    def ops_covered(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._ops))
+
+    def op(self, name: str) -> Callable[..., Any]:
+        try:
+            return self._ops[name]
+        except KeyError:
+            raise KeyError(
+                f"backend '{self.name}' does not implement op '{name}' "
+                f"(covers {self.ops_covered()})") from None
+
+    def supports(self, site: OpSite) -> Union[bool, FallbackReason]:
+        """``True`` if this backend can execute ``site``, else a
+        :class:`FallbackReason`.
+
+        Check order is op → dtype → per-op shape constraints → platform, so
+        the recorded reason names the most *specific* obstacle (a misaligned
+        shape reads ``shape:...`` even on a host where the platform gate
+        would also have fired).
+        """
+        if site.op not in self._ops:
+            return FallbackReason(f"op:{site.op} not implemented by "
+                                  f"'{self.name}'")
+        if self.dtypes is not None:
+            for dt in site.dtypes:
+                if dt and dt not in self.dtypes:
+                    return FallbackReason(
+                        f"dtype:{dt} unsupported by '{self.name}' "
+                        f"(supports {sorted(self.dtypes)})")
+        check = self.constraints.get(site.op)
+        if check is not None:
+            why = check(site)
+            if why:
+                return FallbackReason(why)
+        if self.platforms is not None and site.platform not in self.platforms:
+            return FallbackReason(
+                f"platform:{site.platform} (backend '{self.name}' needs "
+                f"{sorted(self.platforms)})")
+        return True
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (f"Backend({self.name!r}, mode={self.mode.value}, "
+                f"ops={list(self.ops_covered())})")

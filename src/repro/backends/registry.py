@@ -1,0 +1,194 @@
+"""Process-global backend registry + preference-ladder resolution.
+
+``register_backend`` / ``get_backend`` / ``available_backends`` manage the
+table; ``select_backend`` is the one resolution path every
+:mod:`repro.kernels.ops` entry point and the compiler's dispatcher route
+through:
+
+* the *preference* is a backend name, an ordered tuple of names, or
+  ``None``/``"auto"`` (the mode ladder from
+  :data:`repro.core.modes.BACKEND_LADDER`: pallas where capable, xla
+  otherwise — the long-standing auto semantics, now capability-checked);
+* resolution walks the ladder and picks the first backend whose
+  :meth:`~repro.backends.base.Backend.supports` accepts the site.  ``"xla"``
+  (the universal SIMD reference substrate) terminates every ladder, so
+  resolution always succeeds and an explicit-but-incapable request degrades
+  gracefully *with the reason recorded* rather than erroring mid-trace;
+* when a :func:`record_sites` recorder is active (the compiler installs one
+  around tracing and around its static plan walk), every resolution appends
+  a site record — op, shapes, requested vs chosen backend, exec mode,
+  fallback reason — which becomes the plan report's ``backends`` section.
+
+The three built-in registrants (``pallas``, ``interpret``, ``xla``) are
+registered lazily on first lookup; user backends register at import time of
+user code via :func:`register_backend`.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple, Union
+
+from repro.backends.base import Backend, FallbackReason, OpSite
+from repro.core.modes import BACKEND_LADDER, ExecMode
+
+__all__ = [
+    "register_backend", "unregister_backend", "get_backend",
+    "available_backends", "select_backend", "normalize_preference",
+    "record_sites",
+]
+
+_REGISTRY: Dict[str, Backend] = {}
+_BOOTSTRAPPED = False
+
+
+def _bootstrap() -> None:
+    """Import-register the built-in backends exactly once."""
+    global _BOOTSTRAPPED
+    if _BOOTSTRAPPED:
+        return
+    _BOOTSTRAPPED = True  # set first: the imports below call register
+    from repro.backends import pallas_backend, xla_backend
+    for backend in (pallas_backend.PALLAS, pallas_backend.INTERPRET,
+                    xla_backend.XLA):
+        if backend.name not in _REGISTRY:
+            _REGISTRY[backend.name] = backend
+
+
+def register_backend(backend: Backend, *, overwrite: bool = False) -> Backend:
+    """Add ``backend`` to the process-global registry.
+
+    Registration makes the name selectable everywhere at once —
+    ``SMAOptions(backend=...)``, the ``backend=`` kwarg on every kernel entry
+    point, and the compiler's dispatch — with no per-op edits: that is the
+    extension contract this registry exists for.
+    """
+    _bootstrap()
+    if backend.name in _REGISTRY and not overwrite:
+        raise ValueError(
+            f"backend '{backend.name}' is already registered; pass "
+            f"overwrite=True to replace it")
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def unregister_backend(name: str) -> None:
+    """Remove a registered backend (primarily for tests)."""
+    _bootstrap()
+    _REGISTRY.pop(name, None)
+
+
+def get_backend(name: str) -> Backend:
+    _bootstrap()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"no backend named '{name}' is registered "
+            f"(available: {available_backends()})") from None
+
+
+def available_backends() -> Tuple[str, ...]:
+    """Registered backend names, registration order (built-ins first)."""
+    _bootstrap()
+    return tuple(_REGISTRY)
+
+
+# --------------------------------------------------------------------------
+# Resolution
+# --------------------------------------------------------------------------
+Preference = Union[None, str, Sequence[str]]
+
+
+def normalize_preference(preference: Preference,
+                         interpret: bool = False) -> Tuple[str, ...]:
+    """Collapse the user-facing knobs into an ordered backend-name ladder.
+
+    ``interpret=True`` (the legacy boolean, still the kernel-logic test knob)
+    wins over any backend preference, exactly as it always has.  ``None`` /
+    ``"auto"`` is the systolic-substrate ladder; a single name or an ordered
+    sequence is taken as-is.  ``"xla"`` is appended if absent so every ladder
+    terminates on the universal reference substrate.
+    """
+    if interpret:
+        ladder: Tuple[str, ...] = ("interpret",)
+    elif preference is None or preference == "auto":
+        ladder = BACKEND_LADDER[ExecMode.SYSTOLIC]
+    elif isinstance(preference, str):
+        ladder = (preference,)
+    else:
+        ladder = tuple(preference)
+    if "xla" not in ladder:
+        ladder = ladder + ("xla",)
+    return ladder
+
+
+def select_backend(site: OpSite, preference: Preference = None,
+                   interpret: bool = False
+                   ) -> Tuple[Backend, Optional[FallbackReason]]:
+    """Resolve ``site`` to the first capable backend on the ladder.
+
+    Returns ``(backend, fallback_reason)`` where ``fallback_reason`` is
+    ``None`` when the first choice took the site, else why the first choice
+    declined (the headline reason; later ladder rungs may have declined
+    too).  Records the resolution if a :func:`record_sites` recorder is
+    active.
+    """
+    ladder = normalize_preference(preference, interpret)
+    chosen: Optional[Backend] = None
+    first_reason: Optional[FallbackReason] = None
+    for i, name in enumerate(ladder):
+        backend = get_backend(name)
+        verdict = backend.supports(site)
+        if verdict is True:
+            chosen = backend
+            break
+        if i == 0:
+            # A custom supports() may return a bare False; give it a
+            # meaningful categorized reason rather than recording "False".
+            first_reason = verdict if isinstance(verdict, FallbackReason) \
+                else FallbackReason(f"unsupported:declined by '{name}'")
+    if chosen is None:  # pragma: no cover - xla accepts everything
+        raise RuntimeError(
+            f"no registered backend supports {site.op} "
+            f"(ladder {ladder}): {first_reason}")
+    reason = first_reason if chosen.name != ladder[0] else None
+    recorder = _RECORDER.get()
+    if recorder is not None:
+        recorder.append({
+            "op": site.op,
+            "shapes": [list(s) for s in site.shapes],
+            "dtypes": list(site.dtypes),
+            "platform": site.platform,
+            "requested": list(ladder),
+            "backend": chosen.name,
+            "mode": chosen.mode.value,
+            "fallback_reason": str(reason) if reason is not None else None,
+        })
+    return chosen, reason
+
+
+# --------------------------------------------------------------------------
+# Site recording (the plan report's ``backends`` section)
+# --------------------------------------------------------------------------
+_RECORDER: contextvars.ContextVar[Optional[List[Dict[str, Any]]]] = \
+    contextvars.ContextVar("repro_backend_site_recorder", default=None)
+
+
+@contextlib.contextmanager
+def record_sites(into: Optional[List[Dict[str, Any]]] = None
+                 ) -> Iterator[List[Dict[str, Any]]]:
+    """Record every :func:`select_backend` resolution in the ``with`` scope.
+
+    The compiler wraps (a) model tracing — capturing direct ``kernels.ops``
+    calls from model code — and (b) its static walk of dispatcher GEMM
+    sites, so one compile yields the complete chosen-backend map for the
+    program.  Nested recorders shadow outer ones (inner compile sites do not
+    leak into an outer report).
+    """
+    sites: List[Dict[str, Any]] = into if into is not None else []
+    token = _RECORDER.set(sites)
+    try:
+        yield sites
+    finally:
+        _RECORDER.reset(token)

@@ -37,10 +37,14 @@ import jax
 import jax.numpy as jnp
 from jax import core
 
-from repro.api.options import SMAOptions, resolve_options
+from repro.api.options import SMAOptions, options as options_context, \
+    resolve_options
+from repro.backends import base as _backends_base
+from repro.backends import registry as _backends_registry
 from repro.compiler.fuse import ModelPlan, plan_program
 from repro.compiler.lower import lower_jaxpr
-from repro.compiler.report import fusion_section, plan_report
+from repro.compiler.report import backends_section, fusion_section, \
+    plan_report
 from repro.compiler.rewrite import FusedGemm, RewriteResult, rewrite_program
 from repro.compiler.trace import TracedModel, subjaxprs, trace_model
 from repro.core.sma import SMAPolicy
@@ -84,6 +88,46 @@ def count_dispatch_sites(jaxpr: core.Jaxpr) -> Dict[str, int]:
             for k in counts:
                 counts[k] += inner[k]
     return counts
+
+
+def collect_backend_sites(jaxpr: core.Jaxpr,
+                          rewritten: Optional[RewriteResult],
+                          options: SMAOptions) -> List[Dict[str, Any]]:
+    """Static registry resolution for every GEMM site the dispatcher will
+    execute — the compile-time mirror of the runtime's per-call
+    ``select_backend``.
+
+    Walks exactly the item stream the interpreter walks (FusedGemm
+    pseudo-equations where the rewrite realized a fusion, bare
+    ``sma_eligible`` dots elsewhere, recursively through every sub-jaxpr)
+    and resolves each site from avals alone, so the report's ``backends``
+    section records the same choices the runtime will make.
+    """
+    pref, interpret = options.backend, bool(options.interpret)
+
+    def resolve(op: str, avals, **extras) -> None:
+        site = _backends_base.OpSite.from_args(op, tuple(avals), **extras)
+        _backends_registry.select_backend(site, pref, interpret)
+
+    def walk(jx: core.Jaxpr) -> None:
+        items = rewritten.items_for(jx) if rewritten is not None else jx.eqns
+        for eqn in items:
+            if isinstance(eqn, FusedGemm):
+                if eqn.kind == "prologue":
+                    resolve("rmsnorm_gemm", [v.aval for v in eqn.invars])
+                else:
+                    resolve("sma_gemm", [v.aval for v in eqn.invars[:2]])
+                continue
+            if eqn.primitive.name == "dot_general" and sma_eligible(eqn):
+                resolve("sma_gemm", [v.aval for v in eqn.invars[:2]])
+            for sub in subjaxprs(eqn):
+                walk(sub)
+
+    with _backends_registry.record_sites() as sites:
+        walk(jaxpr)
+    for record in sites:
+        record["origin"] = "dispatch"
+    return sites
 
 
 # --------------------------------------------------------------------------
@@ -324,7 +368,22 @@ def compile_with_options(fn: Callable, *args, name: Optional[str] = None,
     with the shape-polymorphic compile cache.
     """
     o = resolve_options(options)
-    traced = trace_model(fn, *args, name=name, **kwargs)
+    # Record backend resolution for direct kernels.ops calls in model code
+    # (flash/decode attention, rglru, mlstm, hand-written sma_gemm): their
+    # ladders resolve while the model traces, and those choices are baked
+    # into the trace.  The *resolved* options are pushed as the ambient
+    # context for the trace, so engine/per-compile options govern those
+    # trace-time calls exactly like the dispatcher's own GEMM sites — one
+    # dispatch policy everywhere (explicit per-call kwargs win at trace
+    # time; note that a GEMM entry point resolving to a jnp path lowers to
+    # a bare dot_general, which the dispatcher — per its long-standing
+    # contract — re-claims and re-resolves under the engine options at
+    # runtime).
+    with _backends_registry.record_sites() as traced_sites, \
+            options_context(o):
+        traced = trace_model(fn, *args, name=name, **kwargs)
+    for record in traced_sites:
+        record["origin"] = "traced"
     program = lower_jaxpr(traced.closed_jaxpr,
                           max_scan_unroll=o.max_scan_unroll)
     policy = o.policy if o.policy is not None else SMAPolicy(
@@ -346,11 +405,14 @@ def compile_with_options(fn: Callable, *args, name: Optional[str] = None,
     report = plan_report(plan)
     report["options"] = o.asdict()
     report["dispatch"] = {
-        "backend": o.backend or "auto",
+        "backend": list(o.backend) if isinstance(o.backend, tuple)
+        else (o.backend or "auto"),
         "interpret": bool(o.interpret),
         **count_dispatch_sites(traced.jaxpr),
     }
     report["fusion"] = fusion_section(plan, rewritten)
+    report["backends"] = backends_section(
+        traced_sites + collect_backend_sites(traced.jaxpr, rewritten, o), o)
     return CompiledModel(traced=traced, plan=plan, report=report,
                          _runner=runner, rewritten=rewritten, options=o)
 

@@ -7,6 +7,9 @@ histograms, and the largest fusion groups.  ``fusion_section`` reconciles
 what the planner *promised* with what the rewrite pass *realized* — fused
 sites, realized HBM bytes avoided, and per-reason fallback counts — so the
 report never over-claims savings the runtime doesn't deliver.
+``backends_section`` reconciles chosen backend + exec mode per op site
+(from the registry's site recorder) with per-reason capability-fallback
+counts — the runtime realization of the paper's temporal mode schedule.
 ``benchmarks/run.py --compile-report`` emits one such report per model
 family.
 """
@@ -102,6 +105,56 @@ def fusion_section(plan: ModelPlan, rewritten: Optional[Any] = None,
     return out
 
 
+def backends_section(records, options, *, max_sites: int = 40
+                     ) -> Dict[str, Any]:
+    """Chosen backend + exec mode per op site, with fallback accounting.
+
+    ``records`` are the site dicts emitted by
+    :func:`repro.backends.registry.record_sites` — one per registry
+    *resolution*, whether performed while tracing model code
+    (``origin="traced"``) or by the dispatcher's static GEMM walk
+    (``origin="dispatch"``).  Counts are per resolution, not per
+    source-level op: a direct ``ops.sma_gemm`` call that resolves to a jnp
+    path lowers to a bare ``dot_general`` which the dispatcher re-claims,
+    so that one GEMM legitimately appears twice — once traced, once
+    dispatched — because both resolutions really happen at runtime.  This
+    section is the runtime realization of the paper's temporal mode
+    schedule: which substrate each op site actually runs on, and why any
+    site fell off its preferred backend.
+    """
+    from repro.backends import registry as _registry
+
+    chosen: Dict[str, int] = {}
+    mode_hist: Dict[str, int] = {}
+    reasons: Dict[str, int] = {}
+    fallback_sites = 0
+    for r in records:
+        chosen[r["backend"]] = chosen.get(r["backend"], 0) + 1
+        mode_hist[r["mode"]] = mode_hist.get(r["mode"], 0) + 1
+        if r.get("fallback_reason"):
+            fallback_sites += 1
+            cat = r["fallback_reason"].split(":", 1)[0]
+            reasons[cat] = reasons.get(cat, 0) + 1
+
+    requested = getattr(options, "backend", None)
+    if isinstance(requested, tuple):
+        requested = list(requested)
+    available = _registry.available_backends()
+    return {
+        "requested": requested or "auto",
+        "interpret": bool(getattr(options, "interpret", False)),
+        "available": list(available),
+        "backend_modes": {name: _registry.get_backend(name).mode.value
+                          for name in available},
+        "num_sites": len(records),
+        "fallback_sites": fallback_sites,
+        "chosen": chosen,
+        "mode_histogram": mode_hist,
+        "fallback_reasons": reasons,
+        "sites": list(records[:max_sites]),
+    }
+
+
 def render_text(report: Dict[str, Any]) -> str:
     """One-screen human rendering of a plan report."""
     lines = [
@@ -136,6 +189,19 @@ def render_text(report: Dict[str, Any]) -> str:
             reasons = ", ".join(f"{k}={v}" for k, v in
                                 sorted(fus["fallback_reasons"].items()))
             lines.append(f"  fusion fallbacks       : {reasons}")
+    bks = report.get("backends")
+    if bks:
+        per_backend = ", ".join(f"{k}={v}" for k, v in
+                                sorted(bks["chosen"].items()))
+        req = bks["requested"]
+        req = "+".join(req) if isinstance(req, list) else req
+        lines.append(
+            f"  backends               : {per_backend or 'no op sites'} "
+            f"(requested {req}; {bks['fallback_sites']} fallback sites)")
+        if bks.get("fallback_reasons"):
+            reasons = ", ".join(f"{k}={v}" for k, v in
+                                sorted(bks["fallback_reasons"].items()))
+            lines.append(f"  backend fallbacks      : {reasons}")
     return "\n".join(lines)
 
 

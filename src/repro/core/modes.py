@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Mapping, Sequence
+from typing import Mapping, Sequence, Tuple
 
 
 class ExecMode(enum.Enum):
@@ -66,6 +66,19 @@ MODE_OF: Mapping[OpKind, ExecMode] = {
     OpKind.EMBED: ExecMode.SIMD,
     OpKind.CAST: ExecMode.SIMD,
 }
+
+#: Backend preference ladder per execution mode — the backend↔ExecMode
+#: mapping the registry's ``auto`` resolution walks.  The SYSTOLIC ladder
+#: tries the hardware systolic-array backend first and degrades to the SIMD
+#: reference substrate; SIMD-mode work goes straight to the flexible
+#: substrate.  ``repro.backends.registry.select_backend`` consults this and
+#: each registrant's capability checks; a registered backend's own
+#: ``Backend.mode`` declares which side of this mapping it extends.
+BACKEND_LADDER: Mapping[ExecMode, Tuple[str, ...]] = {
+    ExecMode.SYSTOLIC: ("pallas", "xla"),
+    ExecMode.SIMD: ("xla",),
+}
+
 
 #: SIMD op kinds that may legally be fused into an adjacent systolic kernel as
 #: a prologue/epilogue (they are pointwise or row-local over the GEMM output

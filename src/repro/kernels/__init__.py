@@ -1,9 +1,11 @@
 """Pallas TPU kernels for the framework's compute hot-spots.
 
 Each kernel lives in ``<name>.py`` (``pl.pallas_call`` + explicit BlockSpec
-VMEM tiling), has a jit'd public wrapper in :mod:`repro.kernels.ops` (with
-pallas / interpret / xla backend dispatch) and a pure-jnp oracle in
-:mod:`repro.kernels.ref`.
+VMEM tiling) together with its capability hooks (``mxu_constraints`` /
+``kernel_constraints`` — the shape/param gates the ``pallas``/``interpret``
+backends consult), has a public wrapper in :mod:`repro.kernels.ops` that
+resolves its executor through the :mod:`repro.backends` registry, and a
+pure-jnp oracle in :mod:`repro.kernels.ref` (the ``xla`` backend).
 """
 from repro.kernels.ops import (decode_attention, flash_attention,
                                mlstm_chunkwise, rglru_scan, rmsnorm_gemm,

@@ -127,3 +127,20 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
         interpret=interpret,
     )(cache_len.astype(jnp.int32), q4, k_cache, v_cache)
     return out.reshape(b, hq, d)
+
+
+def mxu_constraints(site) -> Optional[str]:
+    """Capability gate for the *hardware* (Mosaic-lowered) path.
+
+    The decode kernel's systolic pass is the skinny ``(g, d) @ (d, bs)``
+    GEMM per KV head; the hardware path only takes sites whose head_dim
+    fills MXU half-lanes (``d % 64 == 0``) — anything skinnier is routed
+    down the backend ladder to the SIMD substrate (the paper's
+    flexibility escape hatch), with this string as the recorded reason.
+    The interpreter path has no such gate: the kernel itself pads.
+    """
+    d = site.shapes[0][-1]
+    if d % 64:
+        return (f"shape:head_dim {d} not MXU-aligned "
+                f"(hardware decode kernel needs d % 64 == 0)")
+    return None

@@ -154,3 +154,16 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         interpret=interpret,
     )(q, k, v)
     return out[:, :, :sq, :]
+
+
+def mxu_constraints(site) -> Optional[str]:
+    """Hardware-path capability gate: both systolic passes (q@k^T, p@v)
+    contract over head_dim, which must fill MXU half-lanes
+    (``d % 64 == 0``) for the Mosaic lowering to be worth the mode switch.
+    Misaligned sites ride the chunked-online-softmax SIMD path instead,
+    with this reason recorded."""
+    d = site.shapes[0][-1]
+    if d % 64:
+        return (f"shape:head_dim {d} not MXU-aligned "
+                f"(hardware flash kernel needs d % 64 == 0)")
+    return None

@@ -32,6 +32,7 @@ which is algebraically identical to the sequential recurrence in
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -150,3 +151,23 @@ def mlstm_chunkwise(q: jax.Array, k: jax.Array, v: jax.Array,
         interpret=interpret,
     )(q, k, v, lf4, li4)
     return out[:, :, :s_len, :]
+
+
+def kernel_constraints(site) -> Optional[str]:
+    """Capability gate shared by the hardware and interpreter paths: the
+    Pallas kernel streams outputs only — final (C, n, m) state outputs ride
+    the XLA path (identical math, tested allclose), so ``return_state=True``
+    sites fall down the backend ladder with this reason recorded."""
+    if site.extra("return_state"):
+        return "param:return_state (state outputs ride the XLA path)"
+    return None
+
+
+def mxu_constraints(site) -> Optional[str]:
+    """Hardware-path gate: the per-chunk (L, d) tiles must fill VPU
+    sublanes (``d % 8 == 0``) for the Mosaic lowering."""
+    d = site.shapes[0][-1]
+    if d % 8:
+        return (f"shape:head_dim {d} not sublane-aligned "
+                f"(hardware mlstm kernel needs d % 8 == 0)")
+    return None

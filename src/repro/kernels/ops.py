@@ -1,48 +1,73 @@
-"""Public kernel entry points with backend dispatch.
+"""Public kernel entry points, routed through the backend registry.
 
-Dispatch policy (the framework-wide contract):
+Dispatch policy (the framework-wide contract): every entry point resolves
+its execution backend through :mod:`repro.backends.registry` —
 
-* ``backend="pallas"``   — compiled Pallas TPU kernels (the production path).
-* ``backend="interpret"``— Pallas kernels executed by the interpreter on CPU
-  (used by tests to validate kernel *logic* without TPU hardware).
-* ``backend="xla"``      — the pure-jnp reference implementations from
-  :mod:`repro.kernels.ref`, compiled by XLA.  Identical math and shapes; this
-  is the multi-pod **dry-run** path, where the CPU backend cannot lower
-  Mosaic kernels but FLOP/byte/collective accounting must stay representative.
-* ``backend=None``       — auto: pallas on TPU, xla elsewhere.
+* ``backend="pallas"``   — compiled Pallas TPU kernels (the production
+  systolic-mode path).
+* ``backend="interpret"``— the same kernels under the Pallas interpreter
+  (kernel-logic validation on any platform).  The legacy boolean
+  ``interpret=True`` still forces this backend and wins over any
+  ``backend=`` preference.
+* ``backend="xla"``      — the pure-jnp SIMD-mode reference paths
+  (:mod:`repro.kernels.ref` plus the memory-representative variants in
+  :mod:`repro.backends.xla_backend`), compiled by XLA.  This is the
+  multi-pod **dry-run** path and the universal fallback.
+* ``backend=None``/"auto" — the mode ladder: pallas where capable, xla
+  otherwise.
+* ``backend=("name", ...)`` — an explicit ordered preference ladder; any
+  :func:`repro.backends.register_backend` registrant is selectable here
+  (and via ``SMAOptions.backend``) with no edits to this module.
 
-Every entry point takes the same arguments in every backend, so models are
-written once against this module.
+Resolution is capability-checked per call *site* (op, shapes, dtypes,
+platform): a backend that cannot take a site — wrong platform, unsupported
+dtype, non-MXU-aligned shape — is skipped with the reason recorded (plan
+reports surface these in their ``backends`` section), and the ladder
+terminates on ``xla``, which takes everything.  Every entry point takes the
+same arguments under every backend, so models are written once against this
+module.
 
 :mod:`repro.compiler` targets this contract from the other direction: its
 dispatcher executes traced jaxprs and routes every SYSTOLIC-anchored GEMM
 (the ``(..., K) @ (K, N)`` LSMA macro-op shape) through :func:`sma_gemm`
-with the same ``backend``/``interpret`` knobs, so compiled models and
-hand-written models share one dispatch policy.
+with the same knobs, so compiled models and hand-written models share one
+dispatch policy.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.api.options import current_options
-from repro.distributed.sharding import shard as _shard
-from repro.kernels import ref as _ref
+from repro.backends import base as _base
+from repro.backends import registry as _registry
+
+#: Back-compat aliases: these memory-representative XLA paths lived here
+#: before the backend registry re-homed them into
+#: :mod:`repro.backends.xla_backend`.  Resolved lazily (PEP 562) to avoid a
+#: circular import when the backend module loads first.
+_LEGACY_XLA_ALIASES = {
+    "_chunked_mha_xla": "chunked_mha",
+    "_assoc_rglru_xla": "assoc_rglru",
+    "_mlstm_chunkwise_xla": "mlstm_chunkwise",
+}
 
 
-def _resolve(backend: Optional[str]) -> str:
-    if backend is None:
-        return "pallas" if jax.default_backend() == "tpu" else "xla"
-    return backend
+def __getattr__(name: str):
+    if name in _LEGACY_XLA_ALIASES:
+        from repro.backends import xla_backend
+        return getattr(xla_backend, _LEGACY_XLA_ALIASES[name])
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
-def _gemm_ambient(backend, interpret, precision=None, block_m=None,
-                  block_n=None, block_k=None, autotune=False):
+def _knobs(**explicit: Any) -> Dict[str, Any]:
     """One-read resolution of every kernel knob left unset (``None``)
     against the ambient ``repro.options`` context — the single
-    configuration path (explicit kwargs still win).
+    configuration path, shared by all entry points.  Explicit kwargs
+    (including falsy ones: ``interpret=False``, ``autotune=False``) always
+    beat the ambient value; only ``None`` means *inherit*.
 
     Resolution happens when the call executes, i.e. at trace time if the
     caller is inside ``jax.jit``: the resolved knobs are baked into that
@@ -51,28 +76,26 @@ def _gemm_ambient(backend, interpret, precision=None, block_m=None,
     resolved options).
     """
     o = current_options()
-    return (
-        o.backend if backend is None else backend,
-        bool(o.interpret) if interpret is None else interpret,
-        o.precision if precision is None else precision,
-        o.block_m if block_m is None else block_m,
-        o.block_n if block_n is None else block_n,
-        o.block_k if block_k is None else block_k,
-        bool(o.autotune) if autotune is None else autotune,
-    )
+    out = {k: (getattr(o, k) if v is None else v)
+           for k, v in explicit.items()}
+    for flag in ("interpret", "autotune"):
+        if flag in out:
+            out[flag] = bool(out[flag])
+    return out
 
 
-def _ambient(backend: Optional[str], interpret: Optional[bool]
-             ) -> Tuple[Optional[str], bool]:
-    """Backend/interpret-only view of :func:`_gemm_ambient` (the non-GEMM
-    entry points have no block/precision/autotune knobs)."""
-    return _gemm_ambient(backend, interpret)[:2]
+def _select(op: str, args: Tuple[Any, ...], backend: Any, interpret: bool,
+            **extras: Any) -> _base.Backend:
+    """Registry resolution for one call site (capability-checked ladder)."""
+    site = _base.OpSite.from_args(op, args, **extras)
+    chosen, _ = _registry.select_backend(site, backend, interpret)
+    return chosen
 
 
 def sma_gemm(a: jax.Array, b: jax.Array, *,
              bias: Optional[jax.Array] = None,
              epilogue: str = "none",
-             backend: Optional[str] = None,
+             backend: Any = None,
              interpret: Optional[bool] = None,
              accum_dtype: jnp.dtype = jnp.float32,
              precision=None,
@@ -88,33 +111,17 @@ def sma_gemm(a: jax.Array, b: jax.Array, *,
     :mod:`repro.kernels.autotune`; ``autotune=True`` additionally runs the
     measured search (cached per shape/dtype) on the kernel backends.
     """
-    (backend, interpret, precision, block_m, block_n, block_k,
-     autotune) = _gemm_ambient(backend, interpret, precision,
-                               block_m, block_n, block_k, autotune)
-    backend = "interpret" if interpret else _resolve(backend)
-    if backend == "xla":
-        return _ref.gemm_ref(a, b, bias=bias, epilogue=epilogue,
-                             accum_dtype=accum_dtype, precision=precision)
-    if autotune and (block_m is None or block_n is None or block_k is None):
-        from repro.kernels import autotune as _tune
-        m = 1
-        for d in a.shape[:-1]:
-            m *= d
-        bm, bn, bk = _tune.measured_blocks(
-            m, b.shape[1], a.shape[-1], a.dtype,
-            interpret=(backend == "interpret"))
-        block_m, block_n, block_k = (block_m or bm, block_n or bn,
-                                     block_k or bk)
-    from repro.kernels.sma_gemm import sma_gemm as _kernel
-    return _kernel(a, b, bias=bias, epilogue=epilogue,
-                   block_m=block_m, block_n=block_n, block_k=block_k,
-                   interpret=(backend == "interpret"),
-                   accum_dtype=accum_dtype, precision=precision)
+    kn = _knobs(backend=backend, interpret=interpret, precision=precision,
+                block_m=block_m, block_n=block_n, block_k=block_k,
+                autotune=autotune)
+    be = _select("sma_gemm", (a, b), kn.pop("backend"), kn.pop("interpret"))
+    return be.op("sma_gemm")(a, b, bias=bias, epilogue=epilogue,
+                             accum_dtype=accum_dtype, **kn)
 
 
 def rmsnorm_gemm(x: jax.Array, scale: jax.Array, w: jax.Array, *,
                  epilogue: str = "none", eps: float = 1e-6,
-                 backend: Optional[str] = None,
+                 backend: Any = None,
                  interpret: Optional[bool] = None,
                  precision=None,
                  block_m: Optional[int] = None, block_n: Optional[int] = None,
@@ -123,262 +130,77 @@ def rmsnorm_gemm(x: jax.Array, scale: jax.Array, w: jax.Array, *,
 
     Unset knobs resolve from the ambient options, as in :func:`sma_gemm`.
     """
-    (backend, interpret, precision, block_m, block_n, block_k,
-     _) = _gemm_ambient(backend, interpret, precision,
-                        block_m, block_n, block_k)
-    backend = "interpret" if interpret else _resolve(backend)
-    if backend == "xla":
-        return _ref.rmsnorm_gemm_ref(x, scale, w, epilogue=epilogue, eps=eps,
-                                     precision=precision)
-    from repro.kernels.norm_gemm import rmsnorm_gemm as _kernel
-    return _kernel(x, scale, w, epilogue=epilogue, eps=eps,
-                   block_m=block_m, block_n=block_n, block_k=block_k,
-                   interpret=(backend == "interpret"), precision=precision)
+    kn = _knobs(backend=backend, interpret=interpret, precision=precision,
+                block_m=block_m, block_n=block_n, block_k=block_k)
+    be = _select("rmsnorm_gemm", (x, scale, w),
+                 kn.pop("backend"), kn.pop("interpret"))
+    return be.op("rmsnorm_gemm")(x, scale, w, epilogue=epilogue, eps=eps,
+                                 **kn)
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: Optional[int] = None,
                     scale: Optional[float] = None,
-                    backend: Optional[str] = None,
+                    backend: Any = None,
                     interpret: Optional[bool] = None,
                     block_q: int = 256, block_kv: int = 512,
                     unroll: bool = False,
                     xla_chunk: int = 1024) -> jax.Array:
     """Online-softmax attention (train/prefill)."""
-    backend, interpret = _ambient(backend, interpret)
-    backend = "interpret" if interpret else _resolve(backend)
-    if backend == "xla":
-        return _chunked_mha_xla(q, k, v, causal=causal, window=window,
-                                scale=scale, unroll=unroll, chunk=xla_chunk)
-    from repro.kernels.flash_attention import flash_attention as _kernel
-    return _kernel(q, k, v, causal=causal, window=window, scale=scale,
-                   block_q=block_q, block_kv=block_kv,
-                   interpret=(backend == "interpret"))
+    kn = _knobs(backend=backend, interpret=interpret)
+    be = _select("flash_attention", (q, k, v),
+                 kn.pop("backend"), kn.pop("interpret"))
+    return be.op("flash_attention")(q, k, v, causal=causal, window=window,
+                                    scale=scale, block_q=block_q,
+                                    block_kv=block_kv, unroll=unroll,
+                                    xla_chunk=xla_chunk)
 
 
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      cache_len: jax.Array, *,
                      scale: Optional[float] = None,
-                     backend: Optional[str] = None,
+                     backend: Any = None,
                      interpret: Optional[bool] = None,
                      block_s: int = 512) -> jax.Array:
     """Single-token GQA attention over a KV cache (decode)."""
-    backend, interpret = _ambient(backend, interpret)
-    backend = "interpret" if interpret else _resolve(backend)
-    if backend == "xla":
-        return _ref.decode_attention_ref(q, k_cache, v_cache, cache_len,
-                                         scale=scale)
-    from repro.kernels.decode_attention import decode_attention as _kernel
-    return _kernel(q, k_cache, v_cache, cache_len, scale=scale,
-                   block_s=block_s, interpret=(backend == "interpret"))
+    kn = _knobs(backend=backend, interpret=interpret)
+    be = _select("decode_attention", (q, k_cache, v_cache),
+                 kn.pop("backend"), kn.pop("interpret"))
+    return be.op("decode_attention")(q, k_cache, v_cache, cache_len,
+                                     scale=scale, block_s=block_s)
 
 
 def rglru_scan(a: jax.Array, u: jax.Array,
                h0: Optional[jax.Array] = None, *,
-               backend: Optional[str] = None,
+               backend: Any = None,
                interpret: Optional[bool] = None,
                block_s: int = 256, block_d: int = 256,
                ) -> Tuple[jax.Array, jax.Array]:
     """Gated linear recurrence h_t = a_t h_{t-1} + u_t (RG-LRU core)."""
-    backend, interpret = _ambient(backend, interpret)
-    backend = "interpret" if interpret else _resolve(backend)
-    if backend == "xla":
-        return _assoc_rglru_xla(a, u, h0)
-    from repro.kernels.rglru import rglru_scan as _kernel
-    return _kernel(a, u, h0, block_s=block_s, block_d=block_d,
-                   interpret=(backend == "interpret"))
+    kn = _knobs(backend=backend, interpret=interpret)
+    be = _select("rglru_scan", (a, u),
+                 kn.pop("backend"), kn.pop("interpret"))
+    return be.op("rglru_scan")(a, u, h0, block_s=block_s, block_d=block_d)
 
 
 def mlstm_chunkwise(q: jax.Array, k: jax.Array, v: jax.Array,
                     log_f: jax.Array, log_i: jax.Array, *,
                     chunk: int = 128,
-                    backend: Optional[str] = None,
+                    backend: Any = None,
                     interpret: Optional[bool] = None,
                     unroll: bool = False,
                     return_state: bool = False):
     """Chunkwise-parallel mLSTM (xLSTM matrix memory).
 
     ``return_state=True`` additionally returns the final (C, n, m) state —
-    the prefill path for xLSTM serving.
+    the prefill path for xLSTM serving.  The Pallas kernels stream outputs
+    only, so state-returning sites resolve to the ``xla`` backend via the
+    capability check (identical math, tested allclose).
     """
-    backend, interpret = _ambient(backend, interpret)
-    backend = "interpret" if interpret else _resolve(backend)
-    if backend == "xla":
-        return _mlstm_chunkwise_xla(q, k, v, log_f, log_i, chunk=chunk,
-                                    unroll=unroll, return_state=return_state)
-    from repro.kernels.mlstm import mlstm_chunkwise as _kernel
-    if return_state:
-        # State outputs ride the XLA path (identical math, tested allclose);
-        # the TPU kernel streams them from VMEM scratch on the last chunk.
-        return _mlstm_chunkwise_xla(q, k, v, log_f, log_i, chunk=chunk,
-                                    return_state=True)
-    return _kernel(q, k, v, log_f, log_i, chunk=chunk,
-                   interpret=(backend == "interpret"))
-
-
-# --------------------------------------------------------------------------
-# XLA-path variants that keep dry-run *memory* behaviour representative.
-# --------------------------------------------------------------------------
-def _chunked_mha_xla(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                     causal: bool, window: Optional[int],
-                     scale: Optional[float],
-                     chunk: int = 1024, unroll: bool = False) -> jax.Array:
-    """Online-softmax attention as a lax.scan over KV chunks.
-
-    Semantically `ref.mha_ref`, but (a) never materializes the (Sq, Skv)
-    score matrix — peak activation is (Sq, chunk) — and (b) uses grouped-head
-    einsums so GQA never expands K/V to Hq heads (KV is read once, not
-    group-size times).  This is the dry-run path: memory behaviour matches
-    what the Pallas flash kernel does on TPU.
-    """
-    orig_dtype = q.dtype
-    b, hq, sq, d = q.shape
-    _, hkv, skv, _ = k.shape
-    g = hq // hkv
-    scale = scale if scale is not None else d ** -0.5
-    q5 = q.reshape(b, hkv, g, sq, d).astype(jnp.float32) * scale
-    q_pos = (jnp.arange(sq) + (skv - sq))[None, None, None, :, None]
-
-    pad = (-skv) % chunk
-    if pad:
-        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
-    n_chunks = (skv + pad) // chunk
-    kc = k.reshape(b, hkv, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
-    vc = v.reshape(b, hkv, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
-
-    def step(carry, xs):
-        m_prev, l_prev, acc = carry
-        idx, k_blk, v_blk = xs
-        s = jnp.einsum("bhgqd,bhkd->bhgqk", q5,
-                       k_blk.astype(jnp.float32))
-        k_pos = idx * chunk + jnp.arange(chunk)[None, None, None, None, :]
-        mask = k_pos < skv
-        if causal:
-            mask = mask & (k_pos <= q_pos)
-        if window is not None:
-            mask = mask & (k_pos > q_pos - window)
-        s = jnp.where(mask, s, -1e30)
-        m_cur = jnp.max(s, axis=-1, keepdims=True)
-        m_new = jnp.maximum(m_prev, m_cur)
-        alpha = jnp.exp(m_prev - m_new)
-        p = jnp.exp(s - m_new)
-        l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
-        acc = acc * alpha + jnp.einsum("bhgqk,bhkd->bhgqd", p,
-                                       v_blk.astype(jnp.float32))
-        return (m_new, l_new, acc), None
-
-    init = (jnp.full((b, hkv, g, sq, 1), -1e30, jnp.float32),
-            jnp.zeros((b, hkv, g, sq, 1), jnp.float32),
-            jnp.zeros((b, hkv, g, sq, d), jnp.float32))
-    (m, l, acc), _ = jax.lax.scan(step, init,
-                                  (jnp.arange(n_chunks), kc, vc),
-                                  unroll=unroll)
-    out = acc / jnp.where(l == 0.0, 1.0, l)
-    return out.reshape(b, hq, sq, d).astype(orig_dtype)
-
-
-def _assoc_rglru_xla(a: jax.Array, u: jax.Array,
-                     h0: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
-    """RG-LRU via associative scan: O(log S) depth on the XLA path.
-
-    The recurrence h_t = a_t h_{t-1} + u_t is associative under
-    (a1, u1) o (a2, u2) = (a1*a2, u1*a2 + u2), which XLA parallelizes —
-    important for the 4k-train and 500k-decode dry-runs.
-    """
-    orig_dtype = u.dtype
-    a32, u32 = a.astype(jnp.float32), u.astype(jnp.float32)
-    if h0 is not None:
-        # Fold h0 into the first step: h_1 = a_1 (h0) + u_1.
-        u32 = u32.at[:, 0, :].add(a32[:, 0, :] * h0.astype(jnp.float32))
-
-    def combine(left, right):
-        al, ul = left
-        ar, ur = right
-        return al * ar, ul * ar + ur
-
-    a_sc, h_sc = jax.lax.associative_scan(combine, (a32, u32), axis=1)
-    return h_sc.astype(orig_dtype), h_sc[:, -1, :]
-
-
-def _mlstm_chunkwise_xla(q: jax.Array, k: jax.Array, v: jax.Array,
-                         log_f: jax.Array, log_i: jax.Array, *,
-                         chunk: int, unroll: bool = False,
-                         return_state: bool = False):
-    """Chunkwise mLSTM in pure jnp — mirror of the Pallas kernel math.
-
-    Same stabilized chunkwise algebra as ``kernels.mlstm`` (lax.scan over
-    chunks carrying (C, n, m)); used on the XLA path so the dry-run's memory
-    behaviour matches the TPU kernel (per-chunk (L, L) intermediates, never
-    (S, S)) and so probe compiles can unroll the chunk loop for exact FLOP
-    accounting.
-    """
-    orig_dtype = q.dtype
-    b, h, s_len, d = q.shape
-    scale = d ** -0.5
-    L = min(chunk, s_len)
-    pad = (-s_len) % L
-    if pad:
-        zpad = ((0, 0), (0, 0), (0, pad), (0, 0))
-        q = jnp.pad(q, zpad)
-        k = jnp.pad(k, zpad)
-        v = jnp.pad(v, zpad)
-        log_f = jnp.pad(log_f, ((0, 0), (0, 0), (0, pad)))
-        log_i = jnp.pad(log_i, ((0, 0), (0, 0), (0, pad)),
-                        constant_values=-1e30)
-    sp = s_len + pad
-    n_chunks = sp // L
-
-    def split(t):  # (B,H,S,...) -> (n_chunks, B, H, L, ...)
-        return t.reshape(b, h, n_chunks, L, *t.shape[3:]).swapaxes(0, 2) \
-                .swapaxes(1, 2)
-
-    # Pin the chunk-stack layout once: without this GSPMD re-lays-out every
-    # per-iteration slice (measured 91 collective-permutes/layer on xLSTM —
-    # EXPERIMENTS §Perf C2).
-    fix = lambda t: _shard(t, None, "batch", None, None, "mlp")
-    qc = fix(split(q.astype(jnp.float32) * scale))
-    kc = fix(split(k.astype(jnp.float32)))
-    vc = fix(split(v.astype(jnp.float32)))
-    lfc = split(log_f.astype(jnp.float32))
-    lic = split(log_i.astype(jnp.float32))
-    tri = jnp.tril(jnp.ones((L, L), jnp.bool_))
-
-    def step(carry, xs):
-        c0, n0, m0 = carry               # (B,H,D,D), (B,H,D), (B,H)
-        qq, kk, vv, lf, li = xs
-        b_cum = jnp.cumsum(lf, axis=-1)                     # (B,H,L)
-        a = li - b_cum
-        g = jnp.maximum(m0[..., None], jax.lax.cummax(a, axis=2))
-        m = b_cum + g
-        decay0 = jnp.exp(m0[..., None] - g)                 # (B,H,L)
-        s_mat = jnp.einsum("bhld,bhmd->bhlm", qq, kk)
-        d_mat = jnp.where(tri, jnp.exp(a[:, :, None, :] - g[..., None]), 0.0)
-        sd = s_mat * d_mat
-        intra = jnp.einsum("bhlm,bhmd->bhld", sd, vv)
-        inter = decay0[..., None] * jnp.einsum("bhld,bhde->bhle", qq, c0)
-        num = inter + intra
-        qn0 = jnp.einsum("bhld,bhd->bhl", qq, n0)
-        den_dot = decay0 * qn0 + jnp.sum(sd, axis=-1)
-        den = jnp.maximum(jnp.abs(den_dot), jnp.exp(-m))[..., None]
-        out = num / den
-        g_last = g[..., -1]
-        scale_c = jnp.exp(m0 - g_last)
-        w = jnp.exp(a - g_last[..., None])                  # (B,H,L)
-        c_new = scale_c[..., None, None] * c0 + jnp.einsum(
-            "bhld,bhle->bhde", w[..., None] * kk, vv)
-        c_new = _shard(c_new, "batch", None, None, "mlp")  # stable carry
-        n_new = scale_c[..., None] * n0 + jnp.sum(w[..., None] * kk, axis=2)
-        m_new = b_cum[..., -1] + g_last
-        return (c_new, n_new, m_new), _shard(out, "batch", None, None, "mlp")
-
-    init = (jnp.zeros((b, h, d, d), jnp.float32),
-            jnp.zeros((b, h, d), jnp.float32),
-            jnp.zeros((b, h), jnp.float32))
-    final, outs = jax.lax.scan(step, init, (qc, kc, vc, lfc, lic),
-                               unroll=unroll)
-    out = outs.swapaxes(0, 2).swapaxes(0, 1).reshape(b, h, sp, d)
-    out = out[:, :, :s_len].astype(orig_dtype)
-    if return_state:
-        return out, final  # (C (B,H,D,D), n (B,H,D), m (B,H)) float32
-    return out
+    kn = _knobs(backend=backend, interpret=interpret)
+    be = _select("mlstm_chunkwise", (q, k, v),
+                 kn.pop("backend"), kn.pop("interpret"),
+                 return_state=return_state)
+    return be.op("mlstm_chunkwise")(q, k, v, log_f, log_i, chunk=chunk,
+                                    unroll=unroll,
+                                    return_state=return_state)

@@ -104,3 +104,16 @@ def rglru_scan(a: jax.Array, u: jax.Array,
         interpret=interpret,
     )(a, u, h0)
     return h_seq[:, :s, :d], h_last[:, :d]
+
+
+def mxu_constraints(site) -> Optional[str]:
+    """Hardware-path capability gate: the recurrence streams (1, bd) rows
+    through the VPU, so the channel dim must fill sublanes (``D % 8 == 0``)
+    to lower efficiently.  Misaligned sites fall down the backend ladder to
+    the associative-scan SIMD path with this reason recorded; the
+    interpreter path accepts any D (the kernel pads)."""
+    d = site.shapes[0][-1]
+    if d % 8:
+        return (f"shape:channel dim {d} not VPU sublane-aligned "
+                f"(hardware rglru kernel needs D % 8 == 0)")
+    return None

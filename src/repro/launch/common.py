@@ -152,8 +152,7 @@ def build_cell(cfg: ModelConfig, shape: ShapeConfig,
     ``example_args`` are ShapeDtypeStructs with shardings attached via the
     jit in_shardings, so ``.lower`` never allocates.
     """
-    rt = rt or Runtime(backend="xla", remat=remat,
-                       sequence_parallel=sequence_parallel)
+    rt = rt or Runtime(remat=remat, sequence_parallel=sequence_parallel)
     rules = rules_for(cfg, mesh, batch_size=shape.global_batch,
                       kind=shape.kind, sequence_parallel=sequence_parallel)
     axes = mesh.axis_names

@@ -35,6 +35,7 @@ from repro.configs.base import (ARCH_IDS, SHAPES, applicable_shapes,
 from repro.core import roofline as rl
 from repro.launch.common import build_cell
 from repro.launch.mesh import make_production_mesh
+from repro.api.options import options as sma_options
 from repro.models.layers import Runtime
 
 
@@ -117,13 +118,16 @@ def _probe(cfg, shape, mesh, n_groups: int, *, sequence_parallel: bool,
            remat_policy: str = "full") -> Dict[str, float]:
     """Small unrolled compile for exact per-layer cost accounting."""
     cfg_n = dataclasses.replace(cfg, num_groups=n_groups)
-    rt = Runtime(backend="xla", remat=remat,
+    rt = Runtime(remat=remat,
                  sequence_parallel=sequence_parallel, scan_unroll=True,
                  attention_chunk=attention_chunk,
                  remat_policy=remat_policy)
     fn, args = build_cell(cfg_n, shape, mesh, rt=rt,
                           sequence_parallel=sequence_parallel, remat=remat)
-    with mesh:
+    # The dry-run always lowers the SIMD-substrate (xla) paths: the CPU
+    # backend cannot lower Mosaic kernels, and accounting must stay
+    # mesh-representative.  Ambient options scope it for this trace only.
+    with mesh, sma_options(backend="xla"):
         compiled = fn.lower(*args).compile()
     cost = _cost_dict(compiled)
     coll = rl.collective_bytes_from_hlo(compiled.as_text())
@@ -175,13 +179,13 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
     mesh_name = "2x16x16" if multi_pod else "16x16"
 
     t0 = time.time()
-    rt = Runtime(backend="xla", remat=remat,
+    rt = Runtime(remat=remat,
                  sequence_parallel=sequence_parallel,
                  attention_chunk=attention_chunk,
                  remat_policy=remat_policy)
     fn, args = build_cell(cfg, shape, mesh, rt=rt,
                           sequence_parallel=sequence_parallel, remat=remat)
-    with mesh:
+    with mesh, sma_options(backend="xla"):
         lowered = fn.lower(*args)
         compiled = lowered.compile()
     compile_s = time.time() - t0

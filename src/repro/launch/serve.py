@@ -48,10 +48,11 @@ class Server:
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  cache_size: int = 256, rt: Optional[Runtime] = None,
+                 options: Optional[SMAOptions] = None,
                  temperature: float = 0.0, seed: int = 0) -> None:
         self.cfg = cfg
         self.params = params
-        self.rt = rt or Runtime(backend=None, remat=False)
+        self.rt = rt or Runtime(remat=False)
         self.slots = slots
         self.cache_size = cache_size
         self.temperature = temperature
@@ -59,15 +60,20 @@ class Server:
         self.state = lm.init_state(cfg, slots, cache_size)
         self.cache_len = jnp.zeros((slots,), jnp.int32)
         self.active: Dict[int, Request] = {}
+        # Engine configuration: ``options`` (overlaid on any ambient
+        # ``repro.options(...)`` at call time) is the supported path; the
+        # deprecated Runtime.backend/.interpret fields are folded in
+        # underneath for one release of back-compat.
+        legacy = SMAOptions(backend=self.rt.backend,
+                            interpret=self.rt.interpret or None)
+        self.options = legacy.overlay(options).replace(jit=True)
         # The single decode entry point: warmup and tick share this engine,
         # so after the first call every step is a compile-cache hit (the
         # engine would also transparently handle new signatures, e.g. a
         # multi-token speculative batch, by compiling them once).
         self.engine = sma_jit(
             lambda p, s, cl, b: lm.decode_step(p, s, cl, cfg, self.rt, b),
-            options=SMAOptions(backend=self.rt.backend,
-                               interpret=self.rt.interpret,
-                               jit=True),
+            options=self.options,
             name=f"{cfg.name}.decode_step")
 
     # ------------------------------------------------------------------ slots

@@ -53,7 +53,8 @@ class TrainLoopConfig:
 
 
 def make_step(cfg: ModelConfig, rt: Runtime, ocfg: adamw.AdamWConfig,
-              rules, mesh_axes, *, grad_compression: bool):
+              rules, mesh_axes, *, grad_compression: bool,
+              options: Optional[SMAOptions] = None):
     """Build the train step on the ``sma_jit`` front door.
 
     The engine traces the full fwd+bwd+optimizer program through the SMA
@@ -75,17 +76,19 @@ def make_step(cfg: ModelConfig, rt: Runtime, ocfg: adamw.AdamWConfig,
 
     # donate params/opt_state/ef so XLA updates them in place (same peak
     # memory as the pre-engine jax.jit(step, donate_argnums=(0, 1, 2))).
-    return sma_jit(step,
-                   options=SMAOptions(backend=rt.backend,
-                                      interpret=rt.interpret,
-                                      jit=True, donate_argnums=(0, 1, 2)),
-                   name=f"{cfg.name}.train_step")
+    # ``options`` is the supported configuration path; the deprecated
+    # Runtime.backend/.interpret fields fold in underneath (back-compat).
+    legacy = SMAOptions(backend=rt.backend, interpret=rt.interpret or None)
+    eng_opts = legacy.overlay(options).replace(jit=True,
+                                               donate_argnums=(0, 1, 2))
+    return sma_jit(step, options=eng_opts, name=f"{cfg.name}.train_step")
 
 
 def train(cfg: ModelConfig, loop: TrainLoopConfig,
           rt: Optional[Runtime] = None,
-          mesh: Optional[jax.sharding.Mesh] = None) -> Dict[str, Any]:
-    rt = rt or Runtime(backend=None, remat=loop.remat)
+          mesh: Optional[jax.sharding.Mesh] = None,
+          options: Optional[SMAOptions] = None) -> Dict[str, Any]:
+    rt = rt or Runtime(remat=loop.remat)
     rules = rules_for(cfg, mesh, batch_size=loop.global_batch,
                       kind="train") if mesh is not None else None
     mesh_axes = mesh.axis_names if mesh is not None else ()
@@ -116,7 +119,8 @@ def train(cfg: ModelConfig, loop: TrainLoopConfig,
                              warmup_steps=max(loop.steps // 10, 1),
                              total_steps=loop.steps)
     step_fn = make_step(cfg, rt, ocfg, rules, mesh_axes,
-                        grad_compression=loop.grad_compression)
+                        grad_compression=loop.grad_compression,
+                        options=options)
 
     history = []
     t0 = time.time()

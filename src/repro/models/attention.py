@@ -66,7 +66,6 @@ def attn_apply(params: dict, x: jax.Array, cfg: ModelConfig, rt: Runtime, *,
     k = shard(k.swapaxes(1, 2), "batch", "kv_heads", "seq", "head_dim")
     v = shard(v.swapaxes(1, 2), "batch", "kv_heads", "seq", "head_dim")
     out = kops.flash_attention(q, k, v, causal=True, window=window,
-                               backend=rt.backend, interpret=rt.interpret,
                                unroll=rt.scan_unroll,
                                xla_chunk=rt.attention_chunk)
     out = out.swapaxes(1, 2).reshape(b, s, -1)
@@ -85,7 +84,6 @@ def attn_prefill(params: dict, x: jax.Array, cfg: ModelConfig, rt: Runtime, *,
     kh = shard(k.swapaxes(1, 2), "batch", "kv_heads", "kv_seq", "head_dim")
     vh = shard(v.swapaxes(1, 2), "batch", "kv_heads", "kv_seq", "head_dim")
     out = kops.flash_attention(qh, kh, vh, causal=True, window=window,
-                               backend=rt.backend, interpret=rt.interpret,
                                unroll=rt.scan_unroll,
                                xla_chunk=rt.attention_chunk)
     out = out.swapaxes(1, 2).reshape(b, s, -1)
@@ -130,8 +128,7 @@ def attn_decode(params: dict, x: jax.Array, cache: dict,
     eff_len = jnp.minimum(cache_len + 1, smax) if window is not None \
         else (cache_len + 1)
     out = kops.decode_attention(q1, new_k, new_v,
-                                eff_len.astype(jnp.int32),
-                                backend=rt.backend, interpret=rt.interpret)
+                                eff_len.astype(jnp.int32))
     y = jnp.einsum("...f,fd->...d", out.reshape(b, -1),
                    params["wo"].astype(x.dtype))
     return y[:, None, :], {"k": new_k, "v": new_v}

@@ -12,6 +12,7 @@ Conventions:
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Tuple
 
 import jax
@@ -19,13 +20,24 @@ import jax.numpy as jnp
 
 from repro.distributed.sharding import shard
 
+_RUNTIME_BACKEND_WARNED = False
+
 
 @dataclasses.dataclass(frozen=True)
 class Runtime:
-    """Execution-environment knobs threaded through model code."""
+    """Execution-environment knobs threaded through model code.
 
-    backend: Optional[str] = None   # kernels.ops backend: None=auto
-    interpret: bool = False         # Pallas interpret mode (tests)
+    ``backend``/``interpret`` are DEPRECATED shims: backend selection moved
+    to the one configuration path — ``repro.options(backend=...)`` /
+    ``SMAOptions(backend=...)`` resolved through the
+    :mod:`repro.backends` registry.  Model code no longer reads them; the
+    launch drivers fold them into engine options for one release of
+    back-compat, and constructing a ``Runtime`` with either set warns once
+    per process.
+    """
+
+    backend: Optional[str] = None   # DEPRECATED -> repro.options(backend=…)
+    interpret: bool = False         # DEPRECATED -> repro.options(interpret=…)
     attention_chunk: int = 1024     # XLA-path online-softmax chunk
     remat: bool = True              # checkpoint each block group
     # remat policy: "full" recomputes everything; "dots" saves matmul
@@ -38,6 +50,19 @@ class Runtime:
     # cost_analysis counts a while-loop body ONCE, so roofline FLOP/byte
     # totals are extrapolated from small unrolled probes (see dryrun.py).
     scan_unroll: bool = False
+
+    def __post_init__(self) -> None:
+        global _RUNTIME_BACKEND_WARNED
+        if ((self.backend is not None or self.interpret)
+                and not _RUNTIME_BACKEND_WARNED):
+            _RUNTIME_BACKEND_WARNED = True
+            warnings.warn(
+                "Runtime(backend=..., interpret=...) is deprecated: backend "
+                "selection goes through the repro.backends registry — use "
+                "repro.options(backend=...) / SMAOptions(backend=...) "
+                "instead.  The launch drivers honor these fields for one "
+                "release of back-compat.",
+                DeprecationWarning, stacklevel=3)
 
 
 def compute_cast(w: jax.Array, dtype, *logical_axes: str) -> jax.Array:

@@ -388,8 +388,7 @@ def prefill(params: dict, cfg: ModelConfig, rt: Runtime,
                     "...d,dl->...l", h, mp["w_gate"].astype(h.dtype)))
                 xc = recurrent._causal_conv1d(xr, mp["conv_w"], mp["conv_b"])
                 a, u = recurrent._rglru_gates(mp, xc)
-                h_seq, h_last = kops.rglru_scan(
-                    a, u, None, backend=rt.backend, interpret=rt.interpret)
+                h_seq, h_last = kops.rglru_scan(a, u, None)
                 y = jnp.einsum("...l,ld->...d", h_seq * gate,
                                mp["w_out"].astype(h.dtype))
                 x = x + y

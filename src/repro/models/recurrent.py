@@ -94,8 +94,7 @@ def rglru_block_apply(params: dict, x: jax.Array, cfg: ModelConfig,
     xc = _causal_conv1d(xr, params["conv_w"], params["conv_b"])
     xc = shard(xc, "batch", "seq", "mlp")
     a, u = _rglru_gates(params, xc)
-    h_seq, _ = kops.rglru_scan(a, u, None, backend=rt.backend,
-                               interpret=rt.interpret)
+    h_seq, _ = kops.rglru_scan(a, u, None)
     y = h_seq * gate
     return jnp.einsum("...l,ld->...d", y, params["w_out"].astype(dtype))
 
@@ -217,8 +216,7 @@ def mlstm_block_apply(params: dict, x: jax.Array, cfg: ModelConfig,
     out = kops.mlstm_chunkwise(qh, kh, vh,
                                log_f.transpose(0, 2, 1),
                                log_i.transpose(0, 2, 1),
-                               chunk=cfg.mlstm_chunk,
-                               backend=rt.backend, interpret=rt.interpret)
+                               chunk=cfg.mlstm_chunk)
     out = out.transpose(0, 2, 1, 3).reshape(b, s, inner)
     out = _headwise_rms(out, params["gn_scale"], h)
     out = out * jax.nn.silu(z)
@@ -236,8 +234,7 @@ def mlstm_block_prefill(params: dict, x: jax.Array, cfg: ModelConfig,
     out, (c, n, m) = kops.mlstm_chunkwise(
         to_heads(q), to_heads(k), to_heads(v),
         log_f.transpose(0, 2, 1), log_i.transpose(0, 2, 1),
-        chunk=cfg.mlstm_chunk, backend=rt.backend, interpret=rt.interpret,
-        return_state=True)
+        chunk=cfg.mlstm_chunk, return_state=True)
     out = out.transpose(0, 2, 1, 3).reshape(b, s, inner)
     out = _headwise_rms(out, params["gn_scale"], h)
     out = out * jax.nn.silu(z)

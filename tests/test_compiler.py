@@ -20,7 +20,7 @@ from repro.models import lm
 from repro.models.layers import Runtime
 
 KEY = jax.random.PRNGKey(0)
-RT = Runtime(backend="xla", remat=False)
+RT = Runtime(remat=False)
 
 
 def kinds_of(fn, *args, **lower_kw):

@@ -16,7 +16,7 @@ from repro.models import lm
 from repro.models import moe as moe_lib
 from repro.models.layers import Runtime
 
-RT = Runtime(backend="xla", remat=False)
+RT = Runtime(remat=False)
 KEY = jax.random.PRNGKey(0)
 
 
@@ -51,7 +51,7 @@ class TestArchSmoke:
         cfg = C.reduced(C.get_config(arch))
         params, _ = lm.init(KEY, cfg)
         batch = make_batch(cfg)
-        rt = Runtime(backend="xla", remat=True)
+        rt = Runtime(remat=True)
         (loss, metrics), grads = jax.value_and_grad(
             lambda p: lm.loss_fn(p, cfg, rt, batch), has_aux=True)(params)
         assert np.isfinite(float(loss))

@@ -380,7 +380,7 @@ def test_real_model_realizes_fusion():
     from repro.models import lm
     from repro.models.layers import Runtime
 
-    rt = Runtime(backend="xla", remat=False)
+    rt = Runtime(remat=False)
     cfg = C.reduced(C.get_config("stablelm-1.6b"))
     params, _ = lm.init(KEY, cfg)
     batch = {"tokens": jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)}
