@@ -10,7 +10,6 @@ multi-mode kernels avoid vs a spatially-decoupled schedule.
 from __future__ import annotations
 
 import functools
-import time
 from typing import List, Tuple
 
 import jax
@@ -20,18 +19,14 @@ from repro.backends import xla_backend
 from repro.core.modes import Op, OpKind
 from repro.core.sma import SMAPolicy
 from repro.kernels import ops, ref
+from repro.obs.timing import timeit_us
 
 Row = Tuple[str, float, float]
 
 
 def _time(fn, *args, iters: int = 5) -> float:
-    out = fn(*args)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6
+    """Throughput timing (one block at the end): us per call."""
+    return timeit_us(fn, *args, iters=iters, warmup=1, sync_each=False)
 
 
 def attention_paths() -> List[Row]:
@@ -91,11 +86,7 @@ def mlstm_paths() -> List[Row]:
 def _time_latency(fn, *args, iters: int) -> float:
     """Per-call latency in us: block on every call (no cross-iteration
     pipelining — the mode-switch latency is exactly what we measure)."""
-    jax.block_until_ready(fn(*args))  # warmup/compile
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / iters * 1e6
+    return timeit_us(fn, *args, iters=iters, warmup=1, sync_each=True)
 
 
 def gemm_chain_paths() -> List[Row]:
@@ -166,8 +157,6 @@ def engine_paths() -> List[Row]:
     overhead silently regressing is exactly what the engine exists to
     prevent.
     """
-    import time as _time_mod
-
     from repro.api import SMAOptions, sma_jit
     from repro.compiler.dispatch import compile_with_options
 
@@ -187,11 +176,10 @@ def engine_paths() -> List[Row]:
         args = (x, w1, b1, w2, b2)
         opts = SMAOptions(backend="xla", jit=True)
 
-        # cold: a fresh engine's first call (compile + jit + execute).
+        # cold: a fresh engine's first call (compile + jit + execute) —
+        # warmup=0, iters=1 times exactly that one call.
         engine = sma_jit(chain, options=opts, name=f"decode_mlp_m{m}")
-        t0 = _time_mod.perf_counter()
-        jax.block_until_ready(engine(*args))
-        t_cold = (_time_mod.perf_counter() - t0) * 1e6
+        t_cold = timeit_us(engine, *args, iters=1, warmup=0, sync_each=True)
 
         # percall: the pre-engine front door — recompile on every call
         # (jit=False, matching compile_model's historical default).

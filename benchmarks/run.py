@@ -147,8 +147,23 @@ def main() -> None:
     ap.add_argument("--report-reduced", action="store_true",
                     help="trace reduced (smoke) configs instead of full "
                          "scale")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="profile the benchmark run with repro.obs and "
+                         "write Chrome-trace JSON (Perfetto-loadable) here")
     args, _ = ap.parse_known_args()
 
+    import contextlib
+
+    import repro
+
+    with repro.profile(path=args.trace_out) if args.trace_out \
+            else contextlib.nullcontext():
+        _dispatch(args)
+    if args.trace_out:
+        print(f"# wrote trace -> {args.trace_out}")
+
+
+def _dispatch(args) -> None:
     if args.bench_json:
         write_bench_json(args.bench_json, full=args.bench_full,
                          check=args.bench_check)

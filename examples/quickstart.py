@@ -9,9 +9,14 @@
 4. Run the fused systolic+SIMD kernel (the LSMA analogue) in Pallas
    interpret mode on CPU and check it against the oracle.
 5. Instantiate an assigned architecture (reduced) and take one training step.
+6. `repro.profile` — record a runtime trace of an engine call and render
+   the measured systolic/SIMD mode timeline (``--trace-out`` saves the
+   Chrome-trace JSON for Perfetto).
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  PYTHONPATH=src python examples/quickstart.py [--trace-out trace.json]
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -24,6 +29,11 @@ from repro.kernels import ops, ref
 from repro.models import lm
 from repro.models.layers import Runtime
 from repro.optim import adamw
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--trace-out", default=None, metavar="PATH",
+                help="write section 6's runtime trace as Chrome-trace JSON")
+cli = ap.parse_args()
 
 print("=" * 70)
 print("1) sma_jit: compile once per abstract signature, then cache hits")
@@ -128,4 +138,26 @@ with repro.options(backend="xla"):   # pure SIMD-substrate step on CPU
 params, opt, om = adamw.update(grads, opt, params, adamw.AdamWConfig())
 print(f"loss={float(loss):.4f}  moe_lb_loss={float(metrics['moe_lb_loss']):.5f}"
       f"  grad_norm={float(om['grad_norm']):.3f}")
+
+print()
+print("=" * 70)
+print("6) repro.profile: measured mode timeline of a cached engine call")
+print("=" * 70)
+# interpret = the systolic-mode substrate on CPU, so the timeline shows
+# real systolic<->SIMD alternation; sync=True blocks at span boundaries so
+# the walls are device time, not async enqueue time.
+with repro.options(backend="interpret"):
+    mlp(x8)                                     # warm the cache
+    with repro.profile(path=cli.trace_out, sync=True) as prof:
+        mlp(x8)                                 # one steady-state call
+print(prof.timeline_text())
+with repro.options(backend="interpret"):
+    rsec = mlp.compile(x8).report["runtime"]
+print(f"runtime section: {rsec['mode_switches']} measured mode switches, "
+      f"per-mode "
+      f"{ {m: round(us / 1e3, 2) for m, us in rsec['per_mode_us'].items()} }"
+      f" ms")
+if cli.trace_out:
+    print(f"wrote Chrome trace -> {cli.trace_out} "
+          f"(open in Perfetto / chrome://tracing)")
 print("done.")

@@ -4,8 +4,14 @@ Trains a tiny LM briefly (so generations aren't pure noise), then serves a
 stream of requests through the slot-based batched decoder — prefill-by-warmup,
 per-tick decode for all active slots, slot reuse as requests complete.
 
-Run:  PYTHONPATH=src python examples/serve_lm.py
+Run:  PYTHONPATH=src python examples/serve_lm.py [--trace-out trace.json]
+
+``--trace-out`` profiles the serve loop with ``repro.obs`` and writes a
+Perfetto-loadable Chrome trace (admit/warmup/tick spans, engine cache
+hits, per-mode kernel lanes).
 """
+import argparse
+import contextlib
 import dataclasses
 import time
 
@@ -16,6 +22,11 @@ import repro.configs as C
 from repro.data.pipeline import DataConfig, make_batch, _bigram_params
 from repro.launch.serve import Request, Server
 from repro.launch.train import TrainLoopConfig, train
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--trace-out", default=None, metavar="PATH",
+                help="write a Chrome-trace JSON of the serve loop here")
+args = ap.parse_args()
 
 # Small model, briefly trained on the deterministic bigram corpus.
 cfg = dataclasses.replace(
@@ -52,14 +63,19 @@ for i in range(8):
 pending = list(requests)
 t0 = time.time()
 ticks = 0
-while pending or server.active:
-    while pending and server.admit(pending[0]):
-        pending.pop(0)
-    server.tick()
-    ticks += 1
+with repro.profile(path=args.trace_out) if args.trace_out \
+        else contextlib.nullcontext() as prof:
+    while pending or server.active:
+        while pending and server.admit(pending[0]):
+            pending.pop(0)
+        server.tick()
+        ticks += 1
 dt = time.time() - t0
 print(f"[serve_lm] served {len(requests)} requests in {ticks} ticks "
       f"({dt:.1f}s)")
+if args.trace_out:
+    print(f"[serve_lm] wrote trace -> {args.trace_out}")
+    print(prof.timeline_text())
 
 correct = total = 0
 for req in requests:

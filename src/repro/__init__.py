@@ -15,6 +15,10 @@ Public API (the single front door)::
     with repro.options(backend="mine"):    # it is selectable everywhere
         ...
 
+    with repro.profile(path="trace.json") as prof:
+        engine(*args)                # runtime spans -> Perfetto trace
+    print(prof.timeline_text())      # measured systolic/SIMD timeline
+
 Subsystems live in subpackages (``repro.compiler``, ``repro.kernels``,
 ``repro.backends``, ``repro.models``, ``repro.core``, ...).  Imports here
 are lazy (PEP 562) so ``import repro.configs`` and friends stay light.
@@ -28,15 +32,23 @@ _API_EXPORTS = {
     "SMAOptions", "options", "current_options", "resolve_options",
 }
 
-_SUBPACKAGES = ("compiler", "backends")
+#: Observability front door: ``with repro.profile(path=...): ...`` records
+#: spans for everything inside and (optionally) writes a Perfetto-loadable
+#: Chrome trace.  Off by default; never part of any compile-cache key.
+_OBS_EXPORTS = {"profile"}
 
-__all__ = sorted(_API_EXPORTS) + list(_SUBPACKAGES)
+_SUBPACKAGES = ("compiler", "backends", "obs")
+
+__all__ = sorted(_API_EXPORTS | _OBS_EXPORTS) + list(_SUBPACKAGES)
 
 
 def __getattr__(name: str) -> Any:
     if name in _API_EXPORTS:
         import repro.api as _api
         return getattr(_api, name)
+    if name in _OBS_EXPORTS:
+        import repro.obs as _obs
+        return getattr(_obs, name)
     if name in _SUBPACKAGES:
         import importlib
         return importlib.import_module(f"repro.{name}")

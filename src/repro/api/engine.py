@@ -46,6 +46,8 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 
 from repro.api.options import SMAOptions, resolve_options
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _obs_trace
 
 try:  # jax>=0.4 keeps this in api_util
     from jax.api_util import shaped_abstractify as _abstractify
@@ -156,52 +158,78 @@ class Engine:
                 opts.cache_key())
 
     # ------------------------------------------------------------ compile
-    def _lookup(self, args, kwargs) -> Tuple[_CacheEntry, Dict[str, Any]]:
+    def _lookup(self, args, kwargs
+                ) -> Tuple[_CacheEntry, Dict[str, Any], bool]:
         opts = resolve_options(self.options)
         static, dyn_kwargs = self._split_static(kwargs)
         key = self._key(args, dyn_kwargs, static, opts)
         entry = self._cache.get(key)
         if entry is not None:
             # Hot path: counters only — report stamping happens lazily when
-            # the CompiledModel is handed out (compile()/report accessors).
+            # the report is read (CompiledModel.report refresh hook).
             self.stats.hits += 1
             entry.hits += 1
-            return entry, dyn_kwargs
+            _metrics.inc("engine.cache_hits")
+            return entry, dyn_kwargs, True
 
         from repro.compiler.dispatch import compile_with_options
         fn = functools.partial(self.fn, **static) if static else self.fn
         t0 = time.perf_counter()
-        compiled = compile_with_options(fn, *args, name=self.name,
-                                        options=opts, **dyn_kwargs)
+        with _obs_trace.span("engine.compile", cat="engine",
+                             engine=self.name):
+            compiled = compile_with_options(fn, *args, name=self.name,
+                                            options=opts, **dyn_kwargs)
         dt = time.perf_counter() - t0
         entry = _CacheEntry(compiled=compiled, compile_time_s=dt)
+        # The one shared stamping path: compile(), the report property, and
+        # any obs snapshot all read CompiledModel.report, which re-runs this
+        # hook — hit counts and amortized compile time are always current.
+        compiled.report_refresh = functools.partial(
+            self._refresh_report, entry)
         self._cache[key] = entry
         self.stats.misses += 1
         self.stats.compile_time_s += dt
-        self._stamp_report(entry)
-        return entry, dyn_kwargs
+        _metrics.inc("engine.cache_misses")
+        _metrics.observe("engine.compile_s", dt)
+        return entry, dyn_kwargs, False
 
-    def _stamp_report(self, entry: _CacheEntry) -> None:
+    def _refresh_report(self, entry: _CacheEntry,
+                        rep: Dict[str, Any]) -> None:
+        """Restamp the live sections of one entry's plan report (called on
+        every ``CompiledModel.report`` access)."""
         calls = max(entry.hits + 1, 1)
-        entry.compiled.report["engine"] = {
+        rep["engine"] = {
             "cache_hits": entry.hits,
             "compile_time_s": entry.compile_time_s,
             "amortized_compile_s": entry.compile_time_s / calls,
             "engine_stats": self.stats.asdict(),
         }
+        # The measured half of the plan: aggregate the active (or most
+        # recent) profile window into a ``runtime`` section next to the
+        # static ``mode_switches``/``mode_flop_histogram`` numbers.  The
+        # profile scope is the attribution boundary — runs of other engines
+        # inside the same scope contribute to the same timeline.
+        tracer = _obs_trace.last_tracer()
+        if tracer is not None and tracer.events:
+            rep["runtime"] = tracer.runtime_section()
 
     # ------------------------------------------------------------- public
     def __call__(self, *args, **kwargs):
-        entry, dyn_kwargs = self._lookup(args, kwargs)
-        return entry.compiled(*args, **dyn_kwargs)
+        tracer = _obs_trace.current_tracer()
+        if tracer is None:
+            entry, dyn_kwargs, _ = self._lookup(args, kwargs)
+            return entry.compiled(*args, **dyn_kwargs)
+        with tracer.span("engine.call", cat="engine",
+                         engine=self.name) as sp:
+            entry, dyn_kwargs, hit = self._lookup(args, kwargs)
+            sp.annotate(cache="hit" if hit else "miss")
+            return sp.block(entry.compiled(*args, **dyn_kwargs))
 
     def compile(self, *args, **kwargs):
         """Compile (or fetch) the executable for this signature WITHOUT
         running it — arguments may be ``jax.ShapeDtypeStruct`` placeholders.
         Returns the cached :class:`CompiledModel`."""
-        entry = self._lookup(args, kwargs)[0]
-        self._stamp_report(entry)
-        return entry.compiled
+        return self._lookup(args, kwargs)[0].compiled
 
     @property
     def cache_size(self) -> int:
@@ -215,7 +243,6 @@ class Engine:
         """Engine-level report: cache stats + one summary per entry."""
         entries = []
         for key, entry in self._cache.items():
-            self._stamp_report(entry)
             in_tree, sig, static_key, _ = key
             entries.append({
                 "signature": [list(s) for s in sig],

@@ -31,6 +31,7 @@ from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 from repro.backends.base import Backend, FallbackReason, OpSite
 from repro.core.modes import BACKEND_LADDER, ExecMode
+from repro.obs import metrics as _metrics
 
 __all__ = [
     "register_backend", "unregister_backend", "get_backend",
@@ -153,6 +154,9 @@ def select_backend(site: OpSite, preference: Preference = None,
             f"no registered backend supports {site.op} "
             f"(ladder {ladder}): {first_reason}")
     reason = first_reason if chosen.name != ladder[0] else None
+    _metrics.inc(f"backend.chosen.{chosen.name}")
+    if reason is not None:
+        _metrics.inc(f"backend.fallback.{reason.category}")
     recorder = _RECORDER.get()
     if recorder is not None:
         recorder.append({

@@ -48,6 +48,7 @@ from repro.compiler.report import backends_section, fusion_section, \
 from repro.compiler.rewrite import FusedGemm, RewriteResult, rewrite_program
 from repro.compiler.trace import TracedModel, subjaxprs, trace_model
 from repro.core.sma import SMAPolicy
+from repro.obs import trace as _obs_trace
 
 
 # --------------------------------------------------------------------------
@@ -159,16 +160,45 @@ class _Interpreter:
         for var, val in zip(jaxpr.invars, args):
             write(var, val)
 
+        # Mode-region tracking (profiling only): runs of natively-bound
+        # equations between systolic dispatch sites are SIMD-mode work —
+        # recording them as one span per run makes the runtime timeline
+        # alternate exactly like the plan's temporal mode schedule, so the
+        # report's measured mode-switch count is comparable to the static
+        # ``summary.mode_switches``.  Walls are host/enqueue time (async
+        # dispatch); the tracer's sync knob does not block mid-region.
+        tracer = _obs_trace.current_tracer()
+        region_start: Optional[float] = None
+        region_eqns = 0
+
+        def flush_region() -> None:
+            nonlocal region_start, region_eqns
+            if tracer is not None and region_start is not None:
+                end = tracer.now_us()
+                if end > region_start:
+                    tracer.add_event("dispatch.simd_region", cat="dispatch",
+                                     ts=region_start,
+                                     dur=end - region_start, mode="simd",
+                                     eqns=region_eqns)
+            region_start, region_eqns = None, 0
+
         items = self.rewrite.items_for(jaxpr) if self.rewrite is not None \
             else jaxpr.eqns
         for eqn in items:
             if isinstance(eqn, FusedGemm):
+                flush_region()
                 write(eqn.outvar,
                       self._fused(eqn, [read(v) for v in eqn.invars]))
                 continue
             invals = [read(v) for v in eqn.invars]
             prim = eqn.primitive.name
-            if prim == "dot_general" and sma_eligible(eqn):
+            systolic_site = prim == "dot_general" and sma_eligible(eqn)
+            if tracer is not None:
+                if systolic_site:
+                    flush_region()
+                elif region_start is None:
+                    region_start = tracer.now_us()
+            if systolic_site:
                 outvals = [self._dot(eqn, invals)]
             elif prim == "pjit":
                 outvals = self.eval_closed(eqn.params["jaxpr"], invals)
@@ -192,8 +222,11 @@ class _Interpreter:
                 out = eqn.primitive.bind(*invals, **eqn.params)
                 outvals = list(out) if eqn.primitive.multiple_results \
                     else [out]
+            if tracer is not None and not systolic_site:
+                region_eqns += 1
             for var, val in zip(eqn.outvars, outvals):
                 write(var, val)
+        flush_region()
         return [read(v) for v in jaxpr.outvars]
 
     def _closed_or_open(self, jx, invals):
@@ -217,11 +250,13 @@ class _Interpreter:
         # f64 inputs (x64 mode) down to f32.
         accum = eqn.params.get("preferred_element_type") \
             or jnp.promote_types(a.dtype, jnp.float32)
-        out = kernel_ops.sma_gemm(a, b,
-                                  accum_dtype=jnp.dtype(accum),
-                                  precision=eqn.params.get("precision")
-                                  or self.options.precision,
-                                  **self._gemm_knobs())
+        with _obs_trace.span("dispatch.sma_gemm", cat="dispatch",
+                             lhs=list(a.shape), rhs=list(b.shape)):
+            out = kernel_ops.sma_gemm(a, b,
+                                      accum_dtype=jnp.dtype(accum),
+                                      precision=eqn.params.get("precision")
+                                      or self.options.precision,
+                                      **self._gemm_knobs())
         out_aval = eqn.outvars[0].aval
         if out.dtype != out_aval.dtype:
             out = out.astype(out_aval.dtype)
@@ -230,24 +265,28 @@ class _Interpreter:
     def _fused(self, fg: FusedGemm, invals):
         from repro.kernels import ops as kernel_ops
         knobs = self._gemm_knobs()
-        if fg.kind == "prologue":
-            x, scale, w = invals
-            knobs.pop("autotune")  # rmsnorm_gemm has no measured search
-            out = kernel_ops.rmsnorm_gemm(x, scale, w, epilogue=fg.epilogue,
-                                          eps=fg.eps,
+        with _obs_trace.span("dispatch.fused_gemm", cat="dispatch",
+                             kind=fg.kind, epilogue=fg.epilogue):
+            if fg.kind == "prologue":
+                x, scale, w = invals
+                knobs.pop("autotune")  # rmsnorm_gemm has no measured search
+                out = kernel_ops.rmsnorm_gemm(x, scale, w,
+                                              epilogue=fg.epilogue,
+                                              eps=fg.eps,
+                                              precision=fg.precision
+                                              or self.options.precision,
+                                              **knobs)
+            else:
+                a, b = invals[:2]
+                bias = invals[2] if fg.has_bias else None
+                accum = fg.preferred_element_type \
+                    or jnp.promote_types(a.dtype, jnp.float32)
+                out = kernel_ops.sma_gemm(a, b, bias=bias,
+                                          epilogue=fg.epilogue,
+                                          accum_dtype=jnp.dtype(accum),
                                           precision=fg.precision
                                           or self.options.precision,
                                           **knobs)
-        else:
-            a, b = invals[:2]
-            bias = invals[2] if fg.has_bias else None
-            accum = fg.preferred_element_type \
-                or jnp.promote_types(a.dtype, jnp.float32)
-            out = kernel_ops.sma_gemm(a, b, bias=bias, epilogue=fg.epilogue,
-                                      accum_dtype=jnp.dtype(accum),
-                                      precision=fg.precision
-                                      or self.options.precision,
-                                      **knobs)
         if out.dtype != fg.out_aval.dtype:
             out = out.astype(fg.out_aval.dtype)
         return out
@@ -308,10 +347,25 @@ class CompiledModel:
 
     traced: TracedModel
     plan: ModelPlan
-    report: Dict[str, Any]
+    report_data: Dict[str, Any]
     _runner: Callable
     rewritten: Optional[RewriteResult] = None
     options: Optional[SMAOptions] = None
+    #: Installed by the owning :class:`repro.api.engine.Engine`: re-stamps
+    #: the live report sections (``engine`` hit counters, measured
+    #: ``runtime`` timeline) on every access, so a report read after N
+    #: cache hits shows N, not the numbers frozen at compile time.
+    report_refresh: Optional[Callable[[Dict[str, Any]], None]] = \
+        dataclasses.field(default=None, repr=False, compare=False)
+
+    @property
+    def report(self) -> Dict[str, Any]:
+        """The plan report, with live sections refreshed on access — the
+        one shared stamping path for ``Engine.compile()``, report reads,
+        and obs snapshots."""
+        if self.report_refresh is not None:
+            self.report_refresh(self.report_data)
+        return self.report_data
 
     @property
     def name(self) -> str:
@@ -380,17 +434,22 @@ def compile_with_options(fn: Callable, *args, name: Optional[str] = None,
     # contract — re-claims and re-resolves under the engine options at
     # runtime).
     with _backends_registry.record_sites() as traced_sites, \
-            options_context(o):
+            options_context(o), \
+            _obs_trace.span("compile.trace", cat="compile"):
         traced = trace_model(fn, *args, name=name, **kwargs)
     for record in traced_sites:
         record["origin"] = "traced"
-    program = lower_jaxpr(traced.closed_jaxpr,
-                          max_scan_unroll=o.max_scan_unroll)
+    with _obs_trace.span("compile.lower", cat="compile"):
+        program = lower_jaxpr(traced.closed_jaxpr,
+                              max_scan_unroll=o.max_scan_unroll)
     policy = o.policy if o.policy is not None else SMAPolicy(
         fuse_epilogues=bool(o.fuse_epilogues),
         max_epilogue_ops=o.max_epilogue_ops)
-    plan = plan_program(program, name=traced.name, policy=policy)
-    rewritten = rewrite_program(traced.jaxpr) if o.fuse_runtime else None
+    with _obs_trace.span("compile.plan", cat="compile"):
+        plan = plan_program(program, name=traced.name, policy=policy)
+    with _obs_trace.span("compile.rewrite", cat="compile"):
+        rewritten = rewrite_program(traced.jaxpr) if o.fuse_runtime \
+            else None
 
     interp = _Interpreter(o, rewritten)
 
@@ -413,7 +472,7 @@ def compile_with_options(fn: Callable, *args, name: Optional[str] = None,
     report["fusion"] = fusion_section(plan, rewritten)
     report["backends"] = backends_section(
         traced_sites + collect_backend_sites(traced.jaxpr, rewritten, o), o)
-    return CompiledModel(traced=traced, plan=plan, report=report,
+    return CompiledModel(traced=traced, plan=plan, report_data=report,
                          _runner=runner, rewritten=rewritten, options=o)
 
 

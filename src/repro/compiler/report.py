@@ -202,6 +202,24 @@ def render_text(report: Dict[str, Any]) -> str:
             reasons = ", ".join(f"{k}={v}" for k, v in
                                 sorted(bks["fallback_reasons"].items()))
             lines.append(f"  backend fallbacks      : {reasons}")
+    eng = report.get("engine")
+    if eng:
+        lines.append(
+            f"  engine cache           : {eng['cache_hits']} hits, "
+            f"compile {eng['compile_time_s']:.3f}s "
+            f"(amortized {eng['amortized_compile_s'] * 1e3:.2f} ms/call)")
+    rt = report.get("runtime")
+    if rt and rt.get("enabled"):
+        from repro.obs.export import render_mode_timeline
+        per_mode = ", ".join(
+            f"{m}={us / 1e3:.2f}ms" for m, us in
+            sorted(rt["per_mode_us"].items()))
+        lines.append(
+            f"  runtime (measured)     : {per_mode or 'no mode spans'}; "
+            f"{rt['mode_switches']} mode switches, "
+            f"{rt['switch_overhead_us'] / 1e3:.2f} ms switch overhead")
+        lines.extend("    " + ln
+                     for ln in render_mode_timeline(rt).splitlines())
     return "\n".join(lines)
 
 

@@ -43,6 +43,7 @@ import jax.numpy as jnp
 from repro.api.options import current_options
 from repro.backends import base as _base
 from repro.backends import registry as _registry
+from repro.obs import trace as _obs_trace
 
 #: Back-compat aliases: these memory-representative XLA paths lived here
 #: before the backend registry re-homed them into
@@ -92,6 +93,19 @@ def _select(op: str, args: Tuple[Any, ...], backend: Any, interpret: bool,
     return chosen
 
 
+def _launch(op: str, be: _base.Backend, call, **attrs: Any):
+    """Run one kernel launch, recording a span when a profile scope is
+    active.  The span is tagged with the resolved :class:`ExecMode` and
+    backend so the exported trace lands on the right systolic/SIMD lane;
+    ``attrs`` carries the launch-shaping decisions (block sizes, autotune)."""
+    tr = _obs_trace.current_tracer()
+    if tr is None:
+        return call()
+    with tr.span(f"kernel.{op}", cat="kernel", mode=be.mode.value,
+                 backend=be.name, **attrs) as sp:
+        return sp.block(call())
+
+
 def sma_gemm(a: jax.Array, b: jax.Array, *,
              bias: Optional[jax.Array] = None,
              epilogue: str = "none",
@@ -115,8 +129,27 @@ def sma_gemm(a: jax.Array, b: jax.Array, *,
                 block_m=block_m, block_n=block_n, block_k=block_k,
                 autotune=autotune)
     be = _select("sma_gemm", (a, b), kn.pop("backend"), kn.pop("interpret"))
-    return be.op("sma_gemm")(a, b, bias=bias, epilogue=epilogue,
-                             accum_dtype=accum_dtype, **kn)
+
+    def call():
+        return be.op("sma_gemm")(a, b, bias=bias, epilogue=epilogue,
+                                 accum_dtype=accum_dtype, **kn)
+
+    if _obs_trace.current_tracer() is None:
+        return call()
+    m = 1
+    for d in a.shape[:-1]:
+        m *= int(d)
+    n, k = int(b.shape[-1]), int(b.shape[0])
+    attrs: Dict[str, Any] = {"m": m, "n": n, "k": k,
+                             "epilogue": epilogue,
+                             "autotune": kn["autotune"]}
+    if be.name != "xla":
+        # The kernel backends tile; record the blocks the launch resolves
+        # to (explicit knobs win, heuristic table fills the rest).
+        from repro.kernels import autotune as _autotune
+        attrs["blocks"] = list(_autotune.resolve_blocks(
+            m, n, k, a.dtype, kn["block_m"], kn["block_n"], kn["block_k"]))
+    return _launch("sma_gemm", be, call, **attrs)
 
 
 def rmsnorm_gemm(x: jax.Array, scale: jax.Array, w: jax.Array, *,
@@ -134,8 +167,11 @@ def rmsnorm_gemm(x: jax.Array, scale: jax.Array, w: jax.Array, *,
                 block_m=block_m, block_n=block_n, block_k=block_k)
     be = _select("rmsnorm_gemm", (x, scale, w),
                  kn.pop("backend"), kn.pop("interpret"))
-    return be.op("rmsnorm_gemm")(x, scale, w, epilogue=epilogue, eps=eps,
-                                 **kn)
+    return _launch("rmsnorm_gemm", be,
+                   lambda: be.op("rmsnorm_gemm")(x, scale, w,
+                                                 epilogue=epilogue, eps=eps,
+                                                 **kn),
+                   epilogue=epilogue)
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -150,10 +186,12 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     kn = _knobs(backend=backend, interpret=interpret)
     be = _select("flash_attention", (q, k, v),
                  kn.pop("backend"), kn.pop("interpret"))
-    return be.op("flash_attention")(q, k, v, causal=causal, window=window,
-                                    scale=scale, block_q=block_q,
-                                    block_kv=block_kv, unroll=unroll,
-                                    xla_chunk=xla_chunk)
+    return _launch("flash_attention", be,
+                   lambda: be.op("flash_attention")(
+                       q, k, v, causal=causal, window=window, scale=scale,
+                       block_q=block_q, block_kv=block_kv, unroll=unroll,
+                       xla_chunk=xla_chunk),
+                   blocks=[block_q, block_kv], causal=causal)
 
 
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
@@ -166,8 +204,11 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     kn = _knobs(backend=backend, interpret=interpret)
     be = _select("decode_attention", (q, k_cache, v_cache),
                  kn.pop("backend"), kn.pop("interpret"))
-    return be.op("decode_attention")(q, k_cache, v_cache, cache_len,
-                                     scale=scale, block_s=block_s)
+    return _launch("decode_attention", be,
+                   lambda: be.op("decode_attention")(
+                       q, k_cache, v_cache, cache_len, scale=scale,
+                       block_s=block_s),
+                   blocks=[block_s])
 
 
 def rglru_scan(a: jax.Array, u: jax.Array,
@@ -180,7 +221,10 @@ def rglru_scan(a: jax.Array, u: jax.Array,
     kn = _knobs(backend=backend, interpret=interpret)
     be = _select("rglru_scan", (a, u),
                  kn.pop("backend"), kn.pop("interpret"))
-    return be.op("rglru_scan")(a, u, h0, block_s=block_s, block_d=block_d)
+    return _launch("rglru_scan", be,
+                   lambda: be.op("rglru_scan")(a, u, h0, block_s=block_s,
+                                               block_d=block_d),
+                   blocks=[block_s, block_d])
 
 
 def mlstm_chunkwise(q: jax.Array, k: jax.Array, v: jax.Array,
@@ -201,6 +245,8 @@ def mlstm_chunkwise(q: jax.Array, k: jax.Array, v: jax.Array,
     be = _select("mlstm_chunkwise", (q, k, v),
                  kn.pop("backend"), kn.pop("interpret"),
                  return_state=return_state)
-    return be.op("mlstm_chunkwise")(q, k, v, log_f, log_i, chunk=chunk,
-                                    unroll=unroll,
-                                    return_state=return_state)
+    return _launch("mlstm_chunkwise", be,
+                   lambda: be.op("mlstm_chunkwise")(
+                       q, k, v, log_f, log_i, chunk=chunk, unroll=unroll,
+                       return_state=return_state),
+                   chunk=chunk, return_state=return_state)

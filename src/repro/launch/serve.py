@@ -20,6 +20,7 @@ the same program as the systolic projections.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
 import time
 from typing import Dict, List, Optional
@@ -32,6 +33,7 @@ from repro.api import SMAOptions, sma_jit
 from repro.configs.base import ModelConfig, get_config, reduced
 from repro.models import lm
 from repro.models.layers import Runtime
+from repro.obs import trace as _obs_trace
 
 
 @dataclasses.dataclass
@@ -85,10 +87,12 @@ class Server:
         free = self.free_slots()
         if not free:
             return False
-        req.slot = free[0]
-        req.out_tokens = []
-        self.active[req.rid] = req
-        self._warmup(req)
+        with _obs_trace.span("serve.admit", cat="serve", rid=req.rid,
+                             slot=free[0], prompt_len=len(req.prompt)):
+            req.slot = free[0]
+            req.out_tokens = []
+            self.active[req.rid] = req
+            self._warmup(req)
         return True
 
     def _warmup(self, req: Request) -> None:
@@ -99,23 +103,39 @@ class Server:
         state in one batched pass (tests assert equivalence); per-slot warmup
         is used here because slots admit at different times.
         """
-        self.cache_len = self.cache_len.at[req.slot].set(0)
-        # zero the slot's state
-        self.state = jax.tree.map(
-            lambda s: s.at[:, req.slot].set(jnp.zeros_like(s[:, req.slot]))
-            if s.ndim >= 2 else s, self.state)
-        for tok in req.prompt:
-            batch = self._one_hot_batch(req.slot, int(tok))
-            _, self.state, self.cache_len = self._step_slotwise(
-                req.slot, batch)
+        with _obs_trace.span("serve.warmup", cat="serve", rid=req.rid,
+                             slot=req.slot, tokens=len(req.prompt)):
+            self.cache_len = self.cache_len.at[req.slot].set(0)
+            # zero the slot's state
+            self.state = jax.tree.map(
+                lambda s: s.at[:, req.slot].set(
+                    jnp.zeros_like(s[:, req.slot]))
+                if s.ndim >= 2 else s, self.state)
+            for tok in req.prompt:
+                batch = self._one_hot_batch(req.slot, int(tok))
+                _, self.state, self.cache_len = self._step_slotwise(
+                    req.slot, batch)
+
+    def _token_embeds(self, toks: jax.Array) -> jax.Array:
+        """Look up decoder-input embeddings for a ``(slots, 1)`` token batch.
+
+        Embeds-mode families (e.g. musicgen-large) take continuous inputs,
+        so the server must embed the tokens itself: use the model's own
+        ``embed`` table when the checkpoint has one, else a deterministic
+        one-hot encoding (token id mod d_model) so distinct tokens still
+        produce distinct inputs rather than all-zeros.
+        """
+        table = self.params.get("embed")
+        if table is not None:
+            return table["table"].astype(
+                self.cfg.activation_dtype)[toks]
+        return jax.nn.one_hot(toks % self.cfg.d_model, self.cfg.d_model,
+                              dtype=self.cfg.activation_dtype)
 
     def _one_hot_batch(self, slot: int, token: int) -> Dict[str, jax.Array]:
         toks = jnp.zeros((self.slots, 1), jnp.int32).at[slot, 0].set(token)
         if self.cfg.input_mode == "embeds":
-            table = self.params.get("embed")
-            emb = jnp.zeros((self.slots, 1, self.cfg.d_model),
-                            self.cfg.activation_dtype)
-            return {"embeds": emb}
+            return {"embeds": self._token_embeds(toks)}
         return {"tokens": toks}
 
     def _step_slotwise(self, slot, batch):
@@ -140,6 +160,11 @@ class Server:
         """Decode one token for every active request."""
         if not self.active:
             return {}
+        with _obs_trace.span("serve.tick", cat="serve",
+                             active=len(self.active)):
+            return self._tick()
+
+    def _tick(self) -> Dict[int, int]:
         # last generated (or last prompt) token per slot
         toks = np.zeros((self.slots, 1), np.int32)
         for req in self.active.values():
@@ -148,8 +173,7 @@ class Server:
             toks[req.slot, 0] = last
         batch = {"tokens": jnp.asarray(toks)} \
             if self.cfg.input_mode != "embeds" else \
-            {"embeds": jnp.zeros((self.slots, 1, self.cfg.d_model),
-                                 self.cfg.activation_dtype)}
+            {"embeds": self._token_embeds(jnp.asarray(toks))}
         logits, self.state, self.cache_len = self.engine(
             self.params, self.state, self.cache_len, batch)
         out: Dict[int, int] = {}
@@ -176,6 +200,9 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record a runtime trace of the serve loop and "
+                         "write Chrome-trace JSON (Perfetto-loadable) here")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -194,15 +221,17 @@ def main() -> None:
     done = 0
     t0 = time.time()
     ticks = 0
-    while done < args.requests:
-        while pending and server.admit(pending[0]):
-            req = pending.pop(0)
-            print(f"[serve] admitted request {req.rid} "
-                  f"-> slot {req.slot}")
-        before = len(server.active)
-        server.tick()
-        ticks += 1
-        done += before - len(server.active)
+    with _obs_trace.profile(path=args.trace_out) if args.trace_out \
+            else contextlib.nullcontext() as prof:
+        while done < args.requests:
+            while pending and server.admit(pending[0]):
+                req = pending.pop(0)
+                print(f"[serve] admitted request {req.rid} "
+                      f"-> slot {req.slot}")
+            before = len(server.active)
+            server.tick()
+            ticks += 1
+            done += before - len(server.active)
     dt = time.time() - t0
     print(f"[serve] {args.requests} requests, {ticks} engine ticks, "
           f"{dt:.2f}s ({ticks / dt:.1f} ticks/s)")
@@ -210,6 +239,9 @@ def main() -> None:
     print(f"[serve] engine cache: {st.hits} hits / {st.misses} compiles, "
           f"compile {st.compile_time_s:.2f}s "
           f"({st.amortized_compile_s * 1e3:.2f} ms/call amortized)")
+    if args.trace_out:
+        print(f"[serve] wrote trace -> {args.trace_out}")
+        print(prof.timeline_text())
 
 
 if __name__ == "__main__":

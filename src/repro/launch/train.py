@@ -30,6 +30,7 @@ from repro.distributed.sharding import rules_for, use_rules
 from repro.checkpoint.manager import CheckpointManager
 from repro.models import lm
 from repro.models.layers import Runtime
+from repro.obs import trace as _obs_trace
 from repro.optim import adamw
 from repro.optim import compress as gcomp
 
@@ -126,7 +127,9 @@ def train(cfg: ModelConfig, loop: TrainLoopConfig,
     t0 = time.time()
     for i in range(start_step, loop.steps):
         batch = next(pipe)
-        params, opt_state, ef, metrics = step_fn(params, opt_state, ef, batch)
+        with _obs_trace.span("train.step", cat="train", step=i):
+            params, opt_state, ef, metrics = step_fn(params, opt_state, ef,
+                                                     batch)
         if (i + 1) % loop.log_every == 0 or i == loop.steps - 1:
             m = {k: float(v) for k, v in metrics.items()}
             m["step"] = i + 1

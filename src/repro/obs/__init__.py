@@ -1,0 +1,33 @@
+"""``repro.obs`` — runtime tracing, metrics, and the mode-switch timeline.
+
+The observability layer of the SMA stack.  Three pieces, one contract:
+
+* :mod:`repro.obs.trace` — a contextvar-scoped span tracer.
+  ``repro.profile(path=..., sync=...)`` turns it on for a scope; it is
+  strictly off by default, costs ~one contextvar read per site when
+  disabled, and never participates in the engine's compile-cache key.
+* :mod:`repro.obs.metrics` — a process-wide counters/histograms registry
+  (engine cache hits/misses, compile seconds, backend fallback reasons,
+  per-mode wall time) with ``snapshot()`` / ``reset()``.
+* :mod:`repro.obs.export` — Chrome-trace JSON for Perfetto /
+  ``chrome://tracing`` (systolic and SIMD as two pseudo-thread lanes), the
+  ``runtime`` plan-report section (measured per-mode time, runtime
+  mode-switch count, switch-boundary overhead), and a plain-text timeline.
+
+:mod:`repro.obs.timing` is the shared warmup-aware benchmark timer.
+"""
+from repro.obs.export import (LANES, chrome_trace, render_mode_timeline,
+                              runtime_section, write_chrome_trace)
+from repro.obs.metrics import (METRICS, MetricsRegistry, inc, observe,
+                               reset, snapshot)
+from repro.obs.timing import timeit, timeit_us
+from repro.obs.trace import (Span, Tracer, current_tracer, last_tracer,
+                             profile, span)
+
+__all__ = [
+    "profile", "span", "Span", "Tracer", "current_tracer", "last_tracer",
+    "METRICS", "MetricsRegistry", "inc", "observe", "snapshot", "reset",
+    "chrome_trace", "write_chrome_trace", "runtime_section",
+    "render_mode_timeline", "LANES",
+    "timeit", "timeit_us",
+]

@@ -1,0 +1,76 @@
+"""Process-wide counters/histograms registry.
+
+The tracer (:mod:`repro.obs.trace`) answers "what happened, when" for one
+profiled window; this module answers "how much, overall" for the life of the
+process: engine cache hits/misses, compile seconds, backend capability
+fallbacks by reason, per-mode kernel wall time.  Counters are plain dict
+increments — cheap enough to stay always-on (no enable knob), with
+:func:`snapshot` / :func:`reset` semantics for tests and serving loops.
+
+Producers across the stack feed it:
+
+* :class:`repro.api.engine.Engine` — ``engine.cache_hits`` /
+  ``engine.cache_misses`` counters and the ``engine.compile_s`` histogram;
+* :func:`repro.backends.registry.select_backend` — one
+  ``backend.fallback.<category>`` counter per capability fallback, and
+  ``backend.chosen.<name>`` per resolution;
+* :mod:`repro.kernels.ops` (when a profile is active) — per-mode wall-time
+  histograms ``mode.<systolic|simd>.wall_us``.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict
+
+__all__ = ["MetricsRegistry", "METRICS", "inc", "observe", "snapshot",
+           "reset"]
+
+
+class MetricsRegistry:
+    """Named counters (monotonic ints) + histograms (count/total/min/max)."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._counters: Dict[str, float] = {}
+        self._hists: Dict[str, Dict[str, float]] = {}
+
+    def inc(self, name: str, n: float = 1) -> None:
+        with self._lock:
+            self._counters[name] = self._counters.get(name, 0) + n
+
+    def observe(self, name: str, value: float) -> None:
+        value = float(value)
+        with self._lock:
+            h = self._hists.get(name)
+            if h is None:
+                self._hists[name] = {"count": 1, "total": value,
+                                     "min": value, "max": value}
+            else:
+                h["count"] += 1
+                h["total"] += value
+                h["min"] = min(h["min"], value)
+                h["max"] = max(h["max"], value)
+
+    def snapshot(self) -> Dict[str, Any]:
+        """A JSON-safe point-in-time copy: ``{"counters": {...},
+        "histograms": {name: {count, total, mean, min, max}}}``."""
+        with self._lock:
+            counters = dict(self._counters)
+            hists = {name: {**h, "mean": h["total"] / h["count"]}
+                     for name, h in self._hists.items()}
+        return {"counters": counters, "histograms": hists}
+
+    def reset(self) -> None:
+        with self._lock:
+            self._counters.clear()
+            self._hists.clear()
+
+
+#: The process-wide registry every producer in the stack feeds.
+METRICS = MetricsRegistry()
+
+# Module-level conveniences bound to the global registry.
+inc = METRICS.inc
+observe = METRICS.observe
+snapshot = METRICS.snapshot
+reset = METRICS.reset

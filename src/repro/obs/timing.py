@@ -1,0 +1,57 @@
+"""The one warmup-aware wall-clock timing helper.
+
+Every benchmark in the repo used to hand-roll its own ``perf_counter`` loop
+(``kernel_bench._time``, ``_time_latency``, and a third copy inside
+``engine_paths``), each with subtly different warmup/synchronization
+semantics.  :func:`timeit` is the single shared implementation; the two
+semantics it covers:
+
+* ``sync_each=False`` (throughput): warm up, launch ``iters`` calls
+  back-to-back, block once at the end — async dispatch may pipeline across
+  iterations, which is the steady-state serving number.
+* ``sync_each=True`` (latency): block on every call — no cross-iteration
+  pipelining, so per-call mode-switch/dispatch overhead is exactly what is
+  measured (the number the fused-vs-unfused comparisons need).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable
+
+__all__ = ["timeit", "timeit_us"]
+
+
+def _block(value: Any) -> Any:
+    import jax
+    return jax.block_until_ready(value)
+
+
+def timeit(fn: Callable, *args: Any, iters: int = 5, warmup: int = 1,
+           sync_each: bool = False, **kwargs: Any) -> float:
+    """Seconds per call of ``fn(*args, **kwargs)`` over ``iters`` timed
+    iterations, after ``warmup`` untimed (blocked) calls.
+
+    ``warmup=0`` with ``iters=1`` times a cold first call — compile time
+    included — which is how the engine benches measure cold-start cost.
+    """
+    if iters < 1:
+        raise ValueError("iters must be >= 1")
+    for _ in range(warmup):
+        _block(fn(*args, **kwargs))
+    t0 = time.perf_counter()
+    if sync_each:
+        for _ in range(iters):
+            _block(fn(*args, **kwargs))
+    else:
+        out = None
+        for _ in range(iters):
+            out = fn(*args, **kwargs)
+        _block(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def timeit_us(fn: Callable, *args: Any, iters: int = 5, warmup: int = 1,
+              sync_each: bool = False, **kwargs: Any) -> float:
+    """:func:`timeit`, in microseconds per call (the benchmark row unit)."""
+    return timeit(fn, *args, iters=iters, warmup=warmup,
+                  sync_each=sync_each, **kwargs) * 1e6
