@@ -236,6 +236,72 @@ def backend_paths() -> List[Row]:
             for name, t in sorted(timed.items())]
 
 
+def sharded_paths() -> List[Row]:
+    """SUMMA sharded-GEMM scaling rows on fake host devices (1/2/4).
+
+    Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=4``;
+    mesh sizes above the process's device count are skipped (a 1-device
+    run still emits its rows, which double as the scaling baseline).
+
+    Two sweeps per mesh size, each timed overlapped (double-buffered
+    broadcasts — the production schedule) and non-overlapped (the
+    barrier-serialized reference):
+
+    * ``strong``: fixed global GEMM, more devices — comm grows relative to
+      compute, the adversarial case for overlap;
+    * ``weak``: M scales with devices — fixed per-device compute.
+
+    ``derived`` on the ``.overlap`` row is the speedup vs ``.noverlap``;
+    ``run.py --bench-check`` enforces overlap >= noverlap / slack at every
+    mesh size (fake host "devices" are CPU threads, so these are *schedule*
+    regressions tripwires, not interconnect numbers).  Timing is
+    interleaved min-of-blocks with alternating order, same discipline as
+    the chain rows.  On a 1-device mesh the two schedules are the same
+    program by construction (the sharded entry point falls back to the
+    local GEMM before any broadcast exists), so that pair shares one
+    measurement rather than pretending two identical programs differ.
+    """
+    from repro.distributed import sma_gemm_sharded
+    from repro.launch.mesh import fake_mesh
+
+    rows: List[Row] = []
+    mk, kk, nk = 128, 512, 512         # strong-scaling global shape
+    for nd in (1, 2, 4):
+        if nd > jax.device_count():
+            continue
+        mesh = fake_mesh(nd)
+        for kind, (m, k, n) in (("strong", (mk, kk, nk)),
+                                ("weak", (mk * nd, kk, nk))):
+            key = jax.random.PRNGKey(3)
+            a = jax.random.normal(key, (m, k), jnp.float32)
+            b = jax.random.normal(key, (k, n), jnp.float32) * k ** -0.5
+            fns = {
+                sfx: jax.jit(functools.partial(
+                    sma_gemm_sharded, mesh=mesh, overlap=ov, backend="xla"))
+                for ov, sfx in ((True, "overlap"), (False, "noverlap"))
+            }
+            tag = f"{kind}.d{nd}.m{m}k{k}n{n}"
+            if nd == 1:  # degenerate pair: identical programs
+                t1 = min(_time_latency(fns["overlap"], a, b, iters=20)
+                         for _ in range(4))
+                rows += [(f"sharded.gemm.{tag}.noverlap", t1, 1.0),
+                         (f"sharded.gemm.{tag}.overlap", t1, 1.0)]
+                continue
+            t = {sfx: float("inf") for sfx in fns}
+            for r in range(12):
+                order = ("noverlap", "overlap") if r % 2 \
+                    else ("overlap", "noverlap")
+                for sfx in order:
+                    t[sfx] = min(t[sfx],
+                                 _time_latency(fns[sfx], a, b, iters=20))
+            rows += [
+                (f"sharded.gemm.{tag}.noverlap", t["noverlap"], 1.0),
+                (f"sharded.gemm.{tag}.overlap", t["overlap"],
+                 t["noverlap"] / t["overlap"]),
+            ]
+    return rows
+
+
 def fusion_accounting() -> List[Row]:
     """SMA temporal-fusion savings on one LM block (HBM bytes avoided)."""
     b, s, d, ff, h = 16, 4096, 4096, 14336, 32

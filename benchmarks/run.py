@@ -21,7 +21,8 @@ sys.path.insert(0, _REPO_ROOT)
 
 #: (fast suffix, baseline suffix) pairs the bench gate enforces: the fast
 #: row must not be slower than baseline * slack.
-_CHECK_PAIRS = ((".fused", ".unfused"), (".cached", ".percall"))
+_CHECK_PAIRS = ((".fused", ".unfused"), (".cached", ".percall"),
+                (".overlap", ".noverlap"))
 
 
 def check_chain_rows(rows, *, slack: float = 1.25) -> int:
@@ -89,21 +90,37 @@ def check_backend_rows(rows, baseline_path: str, *, slack: float = 3.0
 
 
 def write_bench_json(path: str, *, full: bool = False,
-                     check: bool = False) -> None:
-    """Run the kernel benches and write ``{schema, meta, rows}`` JSON."""
+                     check: bool = False, suite: str = "kernels") -> None:
+    """Run the kernel benches and write ``{schema, meta, rows}`` JSON.
+
+    ``suite="sharded"`` runs the SUMMA scaling rows instead (launch the
+    process with ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` so
+    the 2- and 4-device meshes exist); the ``--bench-check`` gate then
+    enforces overlapped <= non-overlapped * slack at every mesh size.
+    """
     import jax
 
     from benchmarks import kernel_bench
 
-    rows = kernel_bench.all_rows() if full else kernel_bench.smoke_rows()
-    baseline_violations = check_backend_rows(rows, path) if check else 0
+    if suite == "sharded":
+        if jax.device_count() < 4:
+            print(f"# note: only {jax.device_count()} device(s) — set "
+                  f"XLA_FLAGS=--xla_force_host_platform_device_count=4 "
+                  f"for the full 1/2/4 scaling sweep")
+        rows = kernel_bench.sharded_paths()
+        suite_name = "sharded"
+    else:
+        rows = kernel_bench.all_rows() if full else kernel_bench.smoke_rows()
+        suite_name = "full" if full else "smoke"
+    baseline_violations = (check_backend_rows(rows, path)
+                           if check and suite == "kernels" else 0)
     payload = {
         "schema": 1,
         "meta": {
             "jax_version": jax.__version__,
             "backend": jax.default_backend(),
             "device_count": jax.device_count(),
-            "suite": "full" if full else "smoke",
+            "suite": suite_name,
         },
         "rows": [{"name": name, "us_per_call": us, "derived": derived}
                  for name, us, derived in rows],
@@ -117,7 +134,8 @@ def write_bench_json(path: str, *, full: bool = False,
     print(f"# wrote {len(rows)} rows -> {path}")
     if check and (check_chain_rows(rows) or baseline_violations):
         raise SystemExit("bench check failed: fused chain slower than "
-                         "unfused, cached slower than percall, or a "
+                         "unfused, cached slower than percall, overlapped "
+                         "sharded GEMM slower than non-overlapped, or a "
                          "backend row regressed vs the committed baseline")
 
 
@@ -134,8 +152,17 @@ def main() -> None:
     ap.add_argument("--bench-full", action="store_true",
                     help="with --bench-json: include the heavy kernel rows")
     ap.add_argument("--bench-check", action="store_true",
-                    help="with --bench-json: fail (exit 1) if any fused "
-                         "chain row is slower than its unfused baseline")
+                    help="with --bench-json/--bench-sharded: fail (exit 1) "
+                         "if any fused chain row is slower than its unfused "
+                         "baseline, or any overlapped sharded row slower "
+                         "than its non-overlapped reference")
+    ap.add_argument("--bench-sharded", nargs="?", const=os.path.join(
+                        _REPO_ROOT, "BENCH_gemm_sharded.json"),
+                    default=None, metavar="PATH",
+                    help="run the SUMMA sharded-GEMM scaling rows (needs "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count"
+                         "=4) and write them as JSON (default path: "
+                         "BENCH_gemm_sharded.json at the repo root)")
     ap.add_argument("--compile-report", action="store_true",
                     help="emit one jaxpr->SMA plan report (JSON) per model "
                          "family instead of running benchmarks")
@@ -164,6 +191,11 @@ def main() -> None:
 
 
 def _dispatch(args) -> None:
+    if args.bench_sharded:
+        write_bench_json(args.bench_sharded, check=args.bench_check,
+                         suite="sharded")
+        return
+
     if args.bench_json:
         write_bench_json(args.bench_json, full=args.bench_full,
                          check=args.bench_check)

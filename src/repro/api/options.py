@@ -87,6 +87,20 @@ class SMAOptions:
         configuration so params/optimizer state update in place).  Only
         honored when ``jit`` is on — the interpreted path cannot donate.
         Donated arguments are consumed: do not reuse them after the call.
+
+    distributed
+      * ``mesh`` — a ``jax.sharding.Mesh``; when set, LSMA-eligible GEMMs
+        route through the multi-device SUMMA collective path
+        (:func:`repro.distributed.summa.sma_gemm_sharded`), the planner
+        costs collective bytes alongside HBM bytes, and plan reports gain a
+        ``comm`` section.  Part of the engine cache key: changing the mesh
+        recompiles, same mesh hits.  ``Mesh`` is hashable, so the frozen
+        options object stays hashable.
+      * ``mesh_rules`` — a :class:`repro.distributed.sharding.MeshRules`
+        logical-axis table installed as the ambient sharding-rule context
+        while the model traces, so ``distributed.shard(x, ...)`` constraints
+        in model code resolve against the engine's mesh (defaults to the
+        stock rule table when ``mesh`` is set without rules).
     """
 
     backend: Union[None, str, Tuple[str, ...]] = None
@@ -103,6 +117,8 @@ class SMAOptions:
     block_n: Optional[int] = None
     block_k: Optional[int] = None
     policy: Any = None
+    mesh: Any = None
+    mesh_rules: Any = None
 
     def __post_init__(self) -> None:
         # Keep the object hashable: a backend preference passed as a list
@@ -113,7 +129,8 @@ class SMAOptions:
     _FIELDS = ("backend", "interpret", "autotune", "precision",
                "fuse_runtime", "fuse_epilogues", "max_epilogue_ops",
                "max_scan_unroll", "jit", "donate_argnums",
-               "block_m", "block_n", "block_k", "policy")
+               "block_m", "block_n", "block_k", "policy",
+               "mesh", "mesh_rules")
 
     def overlay(self, other: Optional["SMAOptions"]) -> "SMAOptions":
         """``other``'s explicitly-set (non-``None``) fields override ours."""
@@ -146,6 +163,12 @@ class SMAOptions:
                 v = str(v)
             elif f == "backend" and isinstance(v, tuple):
                 v = list(v)
+            elif f == "mesh" and v is not None:
+                shape = getattr(v, "shape", {})
+                v = {"axes": {str(k): int(s) for k, s in dict(shape).items()},
+                     "devices": int(getattr(v, "size", 0))}
+            elif f == "mesh_rules" and v is not None:
+                v = type(v).__name__
             out[f] = v
         return out
 

@@ -28,6 +28,7 @@ be ``jax.jit``-ed (``compile_model(..., jit=True)``).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import warnings
@@ -42,33 +43,18 @@ from repro.api.options import SMAOptions, options as options_context, \
 from repro.backends import base as _backends_base
 from repro.backends import registry as _backends_registry
 from repro.compiler.fuse import ModelPlan, plan_program
-from repro.compiler.lower import lower_jaxpr
-from repro.compiler.report import backends_section, fusion_section, \
-    plan_report
+from repro.compiler.lower import lower_jaxpr, sma_eligible
+from repro.compiler.report import backends_section, comm_section, \
+    fusion_section, plan_report
 from repro.compiler.rewrite import FusedGemm, RewriteResult, rewrite_program
 from repro.compiler.trace import TracedModel, subjaxprs, trace_model
 from repro.core.sma import SMAPolicy
 from repro.obs import trace as _obs_trace
 
 
-# --------------------------------------------------------------------------
-# Eligibility: which dot_generals take the systolic entry point.
-# --------------------------------------------------------------------------
-def sma_eligible(eqn) -> bool:
-    """True for ``(..., K) @ (K, N)`` contractions — the LSMA macro-op shape.
-
-    ``kernels.sma_gemm`` collapses the leading dims of A into the output
-    grid's M; batched dots (attention) keep their native lowering.
-    """
-    if eqn.primitive.name != "dot_general":
-        return False
-    (lhs_c, rhs_c), (lhs_b, rhs_b) = eqn.params["dimension_numbers"]
-    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
-    return (not lhs_b and not rhs_b
-            and len(lhs_c) == 1 and len(rhs_c) == 1
-            and rhs.ndim == 2 and rhs_c[0] == 0
-            and lhs_c[0] == lhs.ndim - 1
-            and lhs.ndim >= 2)
+# Eligibility (which dot_generals take the systolic entry point) now lives
+# in ``compiler.lower`` — one predicate shared by dispatch routing and the
+# planner's mesh comm-costing — and is re-exported here for back-compat.
 
 
 def count_dispatch_sites(jaxpr: core.Jaxpr) -> Dict[str, int]:
@@ -128,6 +114,48 @@ def collect_backend_sites(jaxpr: core.Jaxpr,
         walk(jaxpr)
     for record in sites:
         record["origin"] = "dispatch"
+    return sites
+
+
+def collect_comm_sites(jaxpr: core.Jaxpr,
+                       rewritten: Optional[RewriteResult]
+                       ) -> List[Dict[str, Any]]:
+    """``(m, n, k, itemsizes)`` for every GEMM site that shards on a mesh.
+
+    Walks the same item stream as :func:`collect_backend_sites` — FusedGemm
+    pseudo-equations plus bare ``sma_eligible`` dots — which is by design
+    the same site set :func:`repro.compiler.lower.sma_eligible` comm-costs
+    in the lowered plan, so the report's ``comm`` section and the plan's
+    per-op ``comm_bytes`` price identical traffic.  Each site walks once
+    (cond branches and scan bodies included once, unmultiplied).
+    """
+    sites: List[Dict[str, Any]] = []
+
+    def add(a_aval, b_aval) -> None:
+        m = 1
+        for d in a_aval.shape[:-1]:
+            m *= int(d)
+        sites.append({"m": m, "n": int(b_aval.shape[1]),
+                      "k": int(b_aval.shape[0]),
+                      "itemsize_a": a_aval.dtype.itemsize,
+                      "itemsize_b": b_aval.dtype.itemsize})
+
+    def walk(jx: core.Jaxpr) -> None:
+        items = rewritten.items_for(jx) if rewritten is not None else jx.eqns
+        for eqn in items:
+            if isinstance(eqn, FusedGemm):
+                if eqn.kind == "prologue":
+                    # rmsnorm_gemm(x, scale, w): the underlying dot is x @ w.
+                    add(eqn.invars[0].aval, eqn.invars[2].aval)
+                else:
+                    add(eqn.invars[0].aval, eqn.invars[1].aval)
+                continue
+            if eqn.primitive.name == "dot_general" and sma_eligible(eqn):
+                add(eqn.invars[0].aval, eqn.invars[1].aval)
+            for sub in subjaxprs(eqn):
+                walk(sub)
+
+    walk(jaxpr)
     return sites
 
 
@@ -237,11 +265,18 @@ class _Interpreter:
     # ---------------------------------------------------------- handlers
     def _gemm_knobs(self) -> Dict[str, Any]:
         """Kernel-facing knobs from the one options object (the single
-        configuration path: options -> dispatch -> kernels)."""
+        configuration path: options -> dispatch -> kernels).
+
+        ``mesh=False`` (not ``None``) when the options carry no mesh: the
+        explicit falsy value pins dispatcher GEMMs to the local path even if
+        an ambient ``options(mesh=...)`` context is active at call time —
+        the engine's resolved options are the whole truth for its sites.
+        """
         o = self.options
         return dict(backend=self.backend, interpret=self.interpret,
                     autotune=bool(o.autotune), block_m=o.block_m,
-                    block_n=o.block_n, block_k=o.block_k)
+                    block_n=o.block_n, block_k=o.block_k,
+                    mesh=o.mesh if o.mesh is not None else False)
 
     def _dot(self, eqn, invals):
         from repro.kernels import ops as kernel_ops
@@ -270,6 +305,7 @@ class _Interpreter:
             if fg.kind == "prologue":
                 x, scale, w = invals
                 knobs.pop("autotune")  # rmsnorm_gemm has no measured search
+                knobs.pop("mesh")      # prologue fusion runs device-local
                 out = kernel_ops.rmsnorm_gemm(x, scale, w,
                                               epilogue=fg.epilogue,
                                               eps=fg.eps,
@@ -422,6 +458,18 @@ def compile_with_options(fn: Callable, *args, name: Optional[str] = None,
     with the shape-polymorphic compile cache.
     """
     o = resolve_options(options)
+    # Mesh-aware compile: install the sharding-rule context for the trace
+    # (so ``distributed.shard(x, ...)`` constraints in model code resolve
+    # against the engine's mesh) and build the SUMMA comm coster that
+    # prices collective bytes onto the lowered plan's GEMM ops.
+    comm_coster = None
+    rules_ctx = contextlib.nullcontext()
+    if o.mesh is not None:
+        from repro.distributed.sharding import MeshRules, use_rules
+        from repro.distributed.summa import comm_coster_for
+        comm_coster = comm_coster_for(o.mesh)
+        rules_ctx = use_rules(o.mesh_rules or MeshRules(),
+                              tuple(o.mesh.axis_names))
     # Record backend resolution for direct kernels.ops calls in model code
     # (flash/decode attention, rglru, mlstm, hand-written sma_gemm): their
     # ladders resolve while the model traces, and those choices are baked
@@ -434,14 +482,15 @@ def compile_with_options(fn: Callable, *args, name: Optional[str] = None,
     # contract — re-claims and re-resolves under the engine options at
     # runtime).
     with _backends_registry.record_sites() as traced_sites, \
-            options_context(o), \
+            options_context(o), rules_ctx, \
             _obs_trace.span("compile.trace", cat="compile"):
         traced = trace_model(fn, *args, name=name, **kwargs)
     for record in traced_sites:
         record["origin"] = "traced"
     with _obs_trace.span("compile.lower", cat="compile"):
         program = lower_jaxpr(traced.closed_jaxpr,
-                              max_scan_unroll=o.max_scan_unroll)
+                              max_scan_unroll=o.max_scan_unroll,
+                              comm_coster=comm_coster)
     policy = o.policy if o.policy is not None else SMAPolicy(
         fuse_epilogues=bool(o.fuse_epilogues),
         max_epilogue_ops=o.max_epilogue_ops)
@@ -472,6 +521,9 @@ def compile_with_options(fn: Callable, *args, name: Optional[str] = None,
     report["fusion"] = fusion_section(plan, rewritten)
     report["backends"] = backends_section(
         traced_sites + collect_backend_sites(traced.jaxpr, rewritten, o), o)
+    report["comm"] = comm_section(
+        o.mesh, collect_comm_sites(traced.jaxpr, rewritten),
+        plan_comm_bytes=program.total_comm_bytes)
     return CompiledModel(traced=traced, plan=plan, report_data=report,
                          _runner=runner, rewritten=rewritten, options=o)
 

@@ -37,11 +37,37 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List
+from typing import Callable, Dict, List, Optional
 
 from jax import core
 
 from repro.core.modes import Op, OpKind
+
+#: Mesh-aware comm costing hook: ``(m, n, k, itemsize_a, itemsize_b) ->
+#: collective bytes`` for one LSMA-eligible GEMM site.  Built from the
+#: engine's mesh by :func:`repro.distributed.summa.comm_coster_for` and
+#: injected by the dispatch pipeline, so lowering stays jax-only.
+CommCoster = Callable[[int, int, int, int, int], float]
+
+
+def sma_eligible(eqn) -> bool:
+    """True for ``(..., K) @ (K, N)`` contractions — the LSMA macro-op shape.
+
+    ``kernels.sma_gemm`` collapses the leading dims of A into the output
+    grid's M; batched dots (attention) keep their native lowering.  This is
+    both the dispatcher's systolic-routing predicate and (with a mesh set)
+    the set of sites the SUMMA comm coster prices — one predicate, so the
+    plan's comm ledger covers exactly the sites that shard.
+    """
+    if eqn.primitive.name != "dot_general":
+        return False
+    (lhs_c, rhs_c), (lhs_b, rhs_b) = eqn.params["dimension_numbers"]
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    return (not lhs_b and not rhs_b
+            and len(lhs_c) == 1 and len(rhs_c) == 1
+            and rhs.ndim == 2 and rhs_c[0] == 0
+            and lhs_c[0] == lhs.ndim - 1
+            and lhs.ndim >= 2)
 
 # --------------------------------------------------------------------------
 # Primitive tables
@@ -101,6 +127,10 @@ _TRANSPARENT = {
     "custom_vjp_call": "call_jaxpr",
     "custom_vjp_call_jaxpr": "fun_jaxpr",
     "custom_lin": "call_jaxpr",
+    # A shard_map region (e.g. a pre-sharded sma_gemm_sharded call baked
+    # into the trace) is costed by its body; the defensive any-jaxpr-param
+    # lookup below covers param-name drift across jax versions.
+    "shard_map": "jaxpr",
 }
 
 
@@ -129,6 +159,10 @@ class LoweredProgram:
     @property
     def total_bytes(self) -> float:
         return sum(op.bytes_in + op.bytes_out for op in self.ops)
+
+    @property
+    def total_comm_bytes(self) -> float:
+        return sum(op.comm_bytes for op in self.ops)
 
 
 # --------------------------------------------------------------------------
@@ -192,8 +226,10 @@ def _is_trailing_axis_only(axes, ndim: int) -> bool:
 
 
 class _Lowerer:
-    def __init__(self, max_scan_unroll: int) -> None:
+    def __init__(self, max_scan_unroll: int,
+                 comm_coster: Optional[CommCoster] = None) -> None:
         self.max_scan_unroll = max_scan_unroll
+        self.comm_coster = comm_coster
         self.ops: List[Op] = []
         self.stats = LowerStats()
         self._seq = 0
@@ -201,13 +237,14 @@ class _Lowerer:
     # -------------------------------------------------------------- emit
     def emit(self, name: str, kind: OpKind, *, flops: float,
              bytes_in: float, bytes_out: float, tile_local: bool,
-             mult: float) -> None:
+             mult: float, comm_bytes: float = 0.0) -> None:
         self._seq += 1
         self.ops.append(Op(f"{name}#{self._seq}", kind,
                            flops=flops * mult,
                            bytes_in=bytes_in * mult,
                            bytes_out=bytes_out * mult,
-                           tile_local=tile_local))
+                           tile_local=tile_local,
+                           comm_bytes=comm_bytes * mult))
 
     # -------------------------------------------------------------- walk
     def walk(self, jaxpr: core.Jaxpr, path: str = "", mult: float = 1.0
@@ -250,8 +287,17 @@ class _Lowerer:
 
         if prim in ("dot_general",):
             kind, flops = dot_general_cost(eqn)
+            comm = 0.0
+            if self.comm_coster is not None and sma_eligible(eqn):
+                lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+                m = int(_prod(lhs.shape[:-1])) if lhs.ndim > 1 else 1
+                comm = self.comm_coster(m, int(rhs.shape[1]),
+                                        int(rhs.shape[0]),
+                                        lhs.dtype.itemsize,
+                                        rhs.dtype.itemsize)
             self.emit(name, kind, flops=flops, bytes_in=bin_,
-                      bytes_out=bout, tile_local=True, mult=mult)
+                      bytes_out=bout, tile_local=True, mult=mult,
+                      comm_bytes=comm)
         elif prim == "conv_general_dilated":
             self.emit(name, OpKind.MATMUL, flops=_conv_cost(eqn),
                       bytes_in=bin_, bytes_out=bout, tile_local=True,
@@ -332,7 +378,7 @@ class _Lowerer:
         best_stats = LowerStats()
         best_flops = -1.0
         for i, branch in enumerate(eqn.params["branches"]):
-            probe = _Lowerer(self.max_scan_unroll)
+            probe = _Lowerer(self.max_scan_unroll, self.comm_coster)
             probe.walk(branch.jaxpr, f"{path}cond[{i}]/", mult)
             flops = sum(op.flops for op in probe.ops)
             if flops > best_flops:
@@ -366,8 +412,15 @@ def _is_known_ew(prim: str) -> bool:
 
 
 def lower_jaxpr(closed_jaxpr: core.ClosedJaxpr, *,
-                max_scan_unroll: int = 8) -> LoweredProgram:
-    """Lower a closed jaxpr to the symbolic :class:`Op` program."""
-    lw = _Lowerer(max_scan_unroll)
+                max_scan_unroll: int = 8,
+                comm_coster: Optional[CommCoster] = None) -> LoweredProgram:
+    """Lower a closed jaxpr to the symbolic :class:`Op` program.
+
+    ``comm_coster`` (built from the engine's mesh by
+    :func:`repro.distributed.summa.comm_coster_for`) prices collective
+    bytes onto every LSMA-eligible GEMM op, so mesh-aware plans carry comm
+    traffic alongside HBM bytes.
+    """
+    lw = _Lowerer(max_scan_unroll, comm_coster)
     lw.walk(closed_jaxpr.jaxpr)
     return LoweredProgram(ops=lw.ops, stats=lw.stats)

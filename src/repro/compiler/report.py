@@ -155,6 +155,75 @@ def backends_section(records, options, *, max_sites: int = 40
     }
 
 
+def comm_section(mesh, sites, *, plan_comm_bytes: float = 0.0,
+                 overlap: bool = True, max_sites: int = 20
+                 ) -> Dict[str, Any]:
+    """Predicted collective traffic for one compiled model on ``mesh``.
+
+    ``sites`` are the GEMM-site dicts from
+    :func:`repro.compiler.dispatch.collect_comm_sites`; each is priced
+    through :func:`repro.distributed.summa.summa_comm_stats` — the SAME
+    cost model the sharded kernel's schedule is built from, so the bytes
+    reported here reconcile with what ``sma_gemm_sharded`` actually moves.
+    ``plan_comm_bytes`` is the lowered plan's total (scan bodies multiplied
+    by trip count, ``cond`` lowering only its most expensive branch — so it
+    can legitimately differ from the per-site sum on programs with control
+    flow; on straight-line programs the two agree exactly).
+
+    With no mesh (or a single-device mesh) the section reports
+    ``enabled: False`` and zero traffic — the honest single-device numbers.
+    """
+    out: Dict[str, Any] = {
+        "enabled": False,
+        "grid": [1, 1],
+        "axes": {},
+        "devices": 1,
+        "steps_per_gemm": 0,
+        "num_gemm_sites": len(sites),
+        "bytes_a": 0.0,
+        "bytes_b": 0.0,
+        "bytes_total": 0.0,
+        "hidden_bytes": 0.0,
+        "predicted_overlap_fraction": 0.0,
+        "collectives_per_axis": {},
+        "plan_comm_bytes": float(plan_comm_bytes),
+        "sites": [],
+    }
+    if mesh is None:
+        return out
+    from repro.distributed.summa import summa_comm_stats, summa_grid
+
+    row, col, pr, pc = summa_grid(mesh)
+    out["grid"] = [pr, pc]
+    out["axes"] = {"row": row, "col": col}
+    out["devices"] = int(getattr(mesh, "size", pr * pc))
+    if pr * pc <= 1:
+        return out
+    out["enabled"] = True
+    collectives: Dict[str, int] = {}
+    site_stats = []
+    for s in sites:
+        st = summa_comm_stats(s["m"], s["n"], s["k"], pr=pr, pc=pc,
+                              itemsize_a=s["itemsize_a"],
+                              itemsize_b=s["itemsize_b"], overlap=overlap,
+                              row_axis=row, col_axis=col)
+        out["bytes_a"] += st["bytes_a"]
+        out["bytes_b"] += st["bytes_b"]
+        out["bytes_total"] += st["bytes_total"]
+        out["hidden_bytes"] += st["hidden_bytes"]
+        out["steps_per_gemm"] = st["steps"]
+        for ax, cnt in st["collectives_per_axis"].items():
+            collectives[ax] = collectives.get(ax, 0) + cnt
+        site_stats.append({**s, "bytes_total": st["bytes_total"],
+                           "steps": st["steps"]})
+    out["collectives_per_axis"] = collectives
+    out["predicted_overlap_fraction"] = \
+        (out["hidden_bytes"] / out["bytes_total"]) if out["bytes_total"] \
+        else 0.0
+    out["sites"] = site_stats[:max_sites]
+    return out
+
+
 def render_text(report: Dict[str, Any]) -> str:
     """One-screen human rendering of a plan report."""
     lines = [
@@ -202,6 +271,16 @@ def render_text(report: Dict[str, Any]) -> str:
             reasons = ", ".join(f"{k}={v}" for k, v in
                                 sorted(bks["fallback_reasons"].items()))
             lines.append(f"  backend fallbacks      : {reasons}")
+    comm = report.get("comm")
+    if comm and comm.get("enabled"):
+        per_axis = ", ".join(f"{k}x{v}" for k, v in
+                             sorted(comm["collectives_per_axis"].items()))
+        lines.append(
+            f"  comm (mesh {comm['grid'][0]}x{comm['grid'][1]})    : "
+            f"{comm['bytes_total'] / 1e6:.2f} MB over "
+            f"{comm['num_gemm_sites']} GEMM sites "
+            f"({comm['predicted_overlap_fraction']:.0%} predicted hidden; "
+            f"collectives {per_axis or 'none'})")
     eng = report.get("engine")
     if eng:
         lines.append(

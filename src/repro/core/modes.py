@@ -106,6 +106,11 @@ class Op:
     # mix information across tiles (e.g. full-softmax over an axis split across
     # tiles) must declare tile_local=False and will not be fused.
     tile_local: bool = True
+    # Collective traffic this op moves when executing sharded on a mesh
+    # (SUMMA broadcast bytes for mesh-routed GEMMs; 0 on a single device).
+    # Costed alongside bytes_in/bytes_out so the planner sees comm and HBM
+    # traffic in one ledger.
+    comm_bytes: float = 0.0
 
     @property
     def mode(self) -> ExecMode:

@@ -1,7 +1,12 @@
-"""Distribution layer: sharding rules, pipeline parallelism, collectives."""
+"""Distribution layer: sharding rules, pipeline parallelism, collectives,
+and the SUMMA sharded GEMM."""
 from repro.distributed.sharding import (MeshRules, logical_spec, rules_for,
                                         shard, spec_tree_to_shardings,
                                         use_rules)
+from repro.distributed.summa import (sma_gemm_sharded, summa_comm_stats,
+                                     summa_grid, summa_schedule)
 
 __all__ = ["MeshRules", "logical_spec", "rules_for", "shard",
-           "spec_tree_to_shardings", "use_rules"]
+           "spec_tree_to_shardings", "use_rules",
+           "sma_gemm_sharded", "summa_comm_stats", "summa_grid",
+           "summa_schedule"]

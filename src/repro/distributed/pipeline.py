@@ -69,9 +69,14 @@ def pipeline_apply(stage_fn: Callable, mesh: Mesh, axis: str,
             return (nxt, outs)
 
         buf, outs = jax.lax.fori_loop(0, ticks, tick, (buf, outs))
-        # replicate the last stage's outputs to every shard
-        outs_all = jax.lax.all_gather(outs, axis)      # (P, M, ...)
-        return outs_all[n_stages - 1]
+        # Replicate the last stage's outputs to every shard.  ``tiled=True``
+        # concatenates the per-stage (M, ...) buffers along the existing
+        # leading axis — a (P*M, ...) layout whose stage-s block sits at
+        # rows [s*M, (s+1)*M) — matching the out_specs=P() stitching
+        # convention (no new stacked axis to reconcile with the spec).
+        outs_all = jax.lax.all_gather(outs, axis, tiled=True)  # (P*M, ...)
+        return jax.lax.slice_in_dim(
+            outs_all, (n_stages - 1) * n_micro, n_stages * n_micro, axis=0)
 
     fn = shard_map(per_stage, mesh=mesh,
                    in_specs=(param_specs, P()),

@@ -106,6 +106,22 @@ def _launch(op: str, be: _base.Backend, call, **attrs: Any):
         return sp.block(call())
 
 
+def _mesh_routable(a: jax.Array, b: jax.Array, mesh: Any) -> bool:
+    """True when a resolved ``mesh`` knob should route this GEMM through the
+    SUMMA collective path: a real multi-device mesh and the LSMA macro-op
+    shape (``(..., K) @ (K, N)``)."""
+    if mesh is None or mesh is False:
+        return False
+    if getattr(b, "ndim", 0) != 2 or getattr(a, "ndim", 0) < 2:
+        return False
+    try:
+        from repro.distributed.summa import summa_grid
+        _, _, pr, pc = summa_grid(mesh)
+    except (TypeError, AttributeError):
+        return False
+    return pr * pc > 1
+
+
 def sma_gemm(a: jax.Array, b: jax.Array, *,
              bias: Optional[jax.Array] = None,
              epilogue: str = "none",
@@ -115,7 +131,8 @@ def sma_gemm(a: jax.Array, b: jax.Array, *,
              precision=None,
              block_m: Optional[int] = None, block_n: Optional[int] = None,
              block_k: Optional[int] = None,
-             autotune: Optional[bool] = None) -> jax.Array:
+             autotune: Optional[bool] = None,
+             mesh: Any = None) -> jax.Array:
     """Fused GEMM + bias + activation (the LSMA macro-op).
 
     Every knob left unset (``None``) resolves from the ambient
@@ -124,10 +141,27 @@ def sma_gemm(a: jax.Array, b: jax.Array, *,
     ``block_*=None`` then falls back to the shape-aware table in
     :mod:`repro.kernels.autotune`; ``autotune=True`` additionally runs the
     measured search (cached per shape/dtype) on the kernel backends.
+
+    ``mesh`` (a :class:`jax.sharding.Mesh`, or ``SMAOptions.mesh`` via the
+    ambient options) routes the call through the multi-device SUMMA
+    collective GEMM (:func:`repro.distributed.summa.sma_gemm_sharded`) with
+    comm/compute overlap; ``mesh=False`` forces the single-device local
+    path (used by the sharded path itself for its per-step tile GEMMs).
     """
     kn = _knobs(backend=backend, interpret=interpret, precision=precision,
                 block_m=block_m, block_n=block_n, block_k=block_k,
-                autotune=autotune)
+                autotune=autotune, mesh=mesh)
+    mesh_kn = kn.pop("mesh")
+    if _mesh_routable(a, b, mesh_kn):
+        from repro.distributed.summa import sma_gemm_sharded
+        return sma_gemm_sharded(a, b, mesh=mesh_kn, bias=bias,
+                                epilogue=epilogue,
+                                accum_dtype=accum_dtype,
+                                precision=kn["precision"],
+                                backend=kn["backend"],
+                                interpret=kn["interpret"],
+                                block_m=kn["block_m"], block_n=kn["block_n"],
+                                block_k=kn["block_k"])
     be = _select("sma_gemm", (a, b), kn.pop("backend"), kn.pop("interpret"))
 
     def call():

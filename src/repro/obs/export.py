@@ -32,8 +32,11 @@ from typing import Any, Dict, List, Optional, Sequence
 __all__ = ["chrome_trace", "write_chrome_trace", "runtime_section",
            "render_mode_timeline", "LANES"]
 
-#: Pseudo-thread lane ids in the exported trace.
-LANES = {"host": 0, "systolic": 1, "simd": 2}
+#: Pseudo-thread lane ids in the exported trace.  ``comm`` carries the
+#: collective launches of mesh-sharded GEMMs (SUMMA panel broadcasts), so a
+#: sharded run shows a third lane where comm traffic either hides under the
+#: systolic lane (overlap) or strictly alternates with it (reference path).
+LANES = {"host": 0, "systolic": 1, "simd": 2, "comm": 3}
 
 
 def chrome_trace(events: Sequence[Dict[str, Any]], *, pid: int = 1
@@ -90,7 +93,7 @@ def _mode_segments(events: Sequence[Dict[str, Any]]
     non-overlapping segment sequence, innermost span winning."""
     spans = [(e["ts"], e["ts"] + e["dur"], e["mode"], i, e["name"])
              for i, e in enumerate(events)
-             if e.get("mode") in ("systolic", "simd")
+             if e.get("mode") in ("systolic", "simd", "comm")
              and e.get("dur", 0.0) > 0.0]
     if not spans:
         return []
@@ -123,7 +126,7 @@ def runtime_section(events: Sequence[Dict[str, Any]], *, sync: bool = False,
     device-honest durations.
     """
     segments = _mode_segments(events)
-    per_mode = {"systolic": 0.0, "simd": 0.0}
+    per_mode = {"systolic": 0.0, "simd": 0.0, "comm": 0.0}
     switches = 0
     switch_overhead = 0.0
     prev = None
@@ -163,7 +166,8 @@ def render_mode_timeline(section: Dict[str, Any], *, width: int = 64
     SIMD below, one column per time slice of the profiled window."""
     total = section.get("total_us") or 0.0
     segments = section.get("segments") or []
-    lanes = {"systolic": [" "] * width, "simd": [" "] * width}
+    lanes = {"systolic": [" "] * width, "simd": [" "] * width,
+             "comm": [" "] * width}
     if total > 0:
         t0 = min((s["ts"] for s in segments), default=0.0)
         for seg in segments:
@@ -175,7 +179,9 @@ def render_mode_timeline(section: Dict[str, Any], *, width: int = 64
     basis = section.get("wall_basis", "")
     lines = [f"runtime mode timeline ({total / 1e3:.2f} ms window; "
              f"{basis})"]
-    for mode in ("systolic", "simd"):
+    modes = ("systolic", "simd", "comm") if per_mode.get("comm") \
+        else ("systolic", "simd")
+    for mode in modes:
         us = per_mode.get(mode, 0.0)
         share = us / total if total else 0.0
         lines.append(f"  {mode:<8} |{''.join(lanes[mode])}| "

@@ -159,7 +159,7 @@ class TestChromeTrace:
         events = prof.chrome_trace()["traceEvents"]
         lanes = {ev["args"]["name"] for ev in events
                  if ev["ph"] == "M" and ev["name"] == "thread_name"}
-        assert lanes == {"host", "systolic mode", "simd mode"}
+        assert lanes == {"host", "systolic mode", "simd mode", "comm mode"}
         tids = {ev["tid"] for ev in events if ev["ph"] == "X"}
         assert obs_export.LANES["systolic"] in tids  # kernel slices
         assert obs_export.LANES["simd"] in tids      # dispatch regions

@@ -1,0 +1,260 @@
+"""SUMMA sharded-GEMM tests: cost-model unit tests in-process, numerics on
+1/2/4 fake devices in subprocesses (the main pytest process keeps its single
+CPU device), engine cache-key behavior for the mesh knob, and plan-report
+comm reconciliation.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.distributed.summa import (comm_coster_for, summa_comm_stats,
+                                     summa_grid, summa_schedule)
+from repro.launch.mesh import fake_mesh
+from test_distributed import run_subprocess
+
+
+# ------------------------------------------------------- cost model (pure)
+class TestCommModel:
+    def test_schedule_shape(self):
+        s = summa_schedule(64, 32, 96, pr=2, pc=2)
+        assert s["grid"] == [2, 2] and s["steps"] == 2
+        assert s["block"] == [32, 16, 48]
+        assert len(s["per_step"]) == 2
+
+    def test_schedule_lcm_steps(self):
+        assert summa_schedule(8, 8, 8, pr=2, pc=4)["steps"] == 4
+        assert summa_schedule(8, 8, 8, pr=3, pc=2)["steps"] == 6
+        assert summa_schedule(8, 8, 8, pr=1, pc=1)["steps"] == 1
+
+    def test_bytes_traffic_2x2(self):
+        # (2,2) grid, M=N=K=8, f32: block 4x4, panel kp=4.
+        # A panel: 4*4*4B to 1 non-owner in each of 2 rows = 128 B/step.
+        st = summa_comm_stats(8, 8, 8, pr=2, pc=2)
+        assert st["bytes_a"] == 2 * (4 * 4 * 4 * 1 * 2) == 256
+        assert st["bytes_b"] == 256
+        assert st["bytes_total"] == 512
+
+    def test_1d_grid_moves_one_operand_only(self):
+        st = summa_comm_stats(8, 8, 8, pr=1, pc=2)
+        assert st["bytes_b"] == 0 and st["bytes_a"] > 0
+        st = summa_comm_stats(8, 8, 8, pr=2, pc=1)
+        assert st["bytes_a"] == 0 and st["bytes_b"] > 0
+
+    def test_single_device_is_free(self):
+        st = summa_comm_stats(64, 64, 64, pr=1, pc=1)
+        assert st["bytes_total"] == 0
+        assert st["predicted_overlap_fraction"] == 0.0
+
+    def test_overlap_fraction_is_schedule_derived(self):
+        # Double buffering exposes only step 0's broadcast: (S-1)/S hidden.
+        st = summa_comm_stats(8, 8, 8, pr=2, pc=4)     # S = 4
+        assert st["predicted_overlap_fraction"] == pytest.approx(3 / 4)
+        st = summa_comm_stats(8, 8, 8, pr=2, pc=2, overlap=False)
+        assert st["hidden_bytes"] == 0.0
+
+    def test_collective_counts_per_axis(self):
+        st = summa_comm_stats(8, 8, 8, pr=2, pc=4,
+                              row_axis="data", col_axis="model")
+        assert st["collectives_per_axis"] == {"data": 4, "model": 4}
+
+    def test_grid_derivation(self):
+        mesh = fake_mesh(1)
+        assert summa_grid(mesh) == ("data", "model", 1, 1)
+        assert summa_grid(mesh, axes=("model",)) == ("model", None, 1, 1)
+        # names absent from the mesh degrade to extent-1 axes
+        assert summa_grid(mesh, axes=("nope", "model"))[2] == 1
+
+    def test_comm_coster_single_device_is_none(self):
+        assert comm_coster_for(fake_mesh(1)) is None
+
+
+# ----------------------------------------------- single-device integration
+class TestSingleDevice:
+    def test_sharded_matches_local_on_1_device_mesh(self):
+        from repro.distributed import sma_gemm_sharded
+        from repro.kernels import ops
+        rng = np.random.default_rng(0)
+        a = jnp.asarray(rng.standard_normal((6, 40)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((40, 10)), jnp.float32)
+        bias = jnp.asarray(rng.standard_normal((10,)), jnp.float32)
+        ref = ops.sma_gemm(a, b, bias=bias, epilogue="gelu")
+        out = sma_gemm_sharded(a, b, mesh=fake_mesh(1), bias=bias,
+                               epilogue="gelu")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-5)
+
+    def test_ops_entry_routes_by_mesh_knob(self):
+        """mesh=False pins local even under an ambient mesh context —
+        the sharded path's own per-step GEMMs depend on this."""
+        from repro.kernels import ops
+        rng = np.random.default_rng(1)
+        a = jnp.asarray(rng.standard_normal((4, 16)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
+        ref = ops.sma_gemm(a, b)
+        with repro.options(mesh=fake_mesh(1)):
+            np.testing.assert_allclose(
+                np.asarray(ops.sma_gemm(a, b, mesh=False)),
+                np.asarray(ref), atol=1e-6)
+            np.testing.assert_allclose(
+                np.asarray(ops.sma_gemm(a, b)), np.asarray(ref), atol=1e-6)
+
+    def test_shape_validation(self):
+        from repro.distributed import sma_gemm_sharded
+        mesh = fake_mesh(1)
+        with pytest.raises(ValueError, match="2-D stationary"):
+            sma_gemm_sharded(jnp.zeros((4, 8)), jnp.zeros((2, 8, 3)),
+                             mesh=mesh)
+        with pytest.raises(ValueError, match="contraction mismatch"):
+            sma_gemm_sharded(jnp.zeros((4, 8)), jnp.zeros((9, 3)), mesh=mesh)
+
+
+# --------------------------------------------------- engine cache keying
+class TestEngineCacheKey:
+    def _engine(self):
+        def model(x, w):
+            return x @ w
+        return repro.sma_jit(model)
+
+    def test_mesh_change_misses_same_mesh_hits(self):
+        eng = self._engine()
+        x = jnp.ones((4, 8), jnp.float32)
+        w = jnp.ones((8, 4), jnp.float32)
+        mesh_a = fake_mesh(1)
+        mesh_b = fake_mesh(1, axes=("x", "y"))
+        with repro.options(mesh=mesh_a):
+            eng(x, w)
+            assert eng.cache_size == 1
+            eng(x, w)                       # same mesh: hit
+            assert eng.cache_size == 1
+            assert eng.stats.hits == 1
+        with repro.options(mesh=mesh_b):
+            eng(x, w)                       # different mesh: miss
+            assert eng.cache_size == 2
+        eng(x, w)                           # no mesh: third entry
+        assert eng.cache_size == 3
+
+    def test_equal_meshes_share_entry(self):
+        eng = self._engine()
+        x = jnp.ones((4, 8), jnp.float32)
+        w = jnp.ones((8, 4), jnp.float32)
+        with repro.options(mesh=fake_mesh(1)):
+            eng(x, w)
+        with repro.options(mesh=fake_mesh(1)):   # fresh but equal Mesh
+            eng(x, w)
+        assert eng.cache_size == 1
+        assert eng.stats.hits == 1
+
+    def test_mesh_in_options_asdict(self):
+        opts = repro.SMAOptions(mesh=fake_mesh(1))
+        d = opts.asdict()
+        assert d["mesh"] == {"axes": {"data": 1, "model": 1}, "devices": 1}
+
+
+# ------------------------------------------------- multi-device numerics
+def _equiv_code(devices: int, dtype: str, shapes, tol: str) -> str:
+    return f"""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.mesh import fake_mesh
+        from repro.distributed import sma_gemm_sharded
+        from repro.kernels import ops
+        mesh = fake_mesh({devices})
+        rng = np.random.default_rng(0)
+        for (m, k, n) in {shapes!r}:
+            a = jnp.asarray(rng.standard_normal((m, k)), jnp.{dtype})
+            b = jnp.asarray(rng.standard_normal((k, n)), jnp.{dtype})
+            bias = jnp.asarray(rng.standard_normal((n,)), jnp.{dtype})
+            ref = np.asarray(ops.sma_gemm(a, b, bias=bias, epilogue='relu',
+                                          mesh=False))
+            for overlap in (True, False):
+                out = sma_gemm_sharded(a, b, mesh=mesh, bias=bias,
+                                       epilogue='relu', overlap=overlap)
+                assert out.dtype == a.dtype, out.dtype
+                np.testing.assert_allclose(np.asarray(out, np.float32),
+                                           np.asarray(ref, np.float32),
+                                           {tol})
+        print('SUMMA_EQUIV_OK')
+    """
+
+
+#: Divisible, non-divisible (edge tiles in M, N, and K), and non-square.
+_SHAPES = [(16, 32, 8), (6, 96, 10), (7, 33, 5), (1, 17, 3), (64, 8, 64)]
+
+
+@pytest.mark.parametrize("devices", [1, 2, 4])
+def test_sharded_matches_local_f32(devices):
+    out = run_subprocess(_equiv_code(devices, "float32", _SHAPES,
+                                     "rtol=1e-5, atol=1e-5"),
+                         devices=devices)
+    assert "SUMMA_EQUIV_OK" in out
+
+
+def test_sharded_matches_local_bf16():
+    out = run_subprocess(_equiv_code(4, "bfloat16", _SHAPES[:3],
+                                     "rtol=0.06, atol=0.06"),
+                         devices=4)
+    assert "SUMMA_EQUIV_OK" in out
+
+
+def test_comm_report_reconciles_with_schedule():
+    """Plan-report comm section vs the lowered plan's per-op comm bytes on
+    a scan-free model: the two ledgers must agree exactly, and both must
+    equal the schedule's own ``summa_comm_stats`` sum."""
+    out = run_subprocess("""
+        import jax.numpy as jnp, numpy as np
+        import repro
+        from repro.launch.mesh import fake_mesh
+        from repro.distributed.summa import summa_comm_stats
+        mesh = fake_mesh(4)
+        def model(x, w1, w2):
+            h = jnp.maximum(x @ w1, 0.0)
+            return h @ w2
+        x = jnp.ones((8, 32), jnp.float32)
+        w1 = jnp.ones((32, 64), jnp.float32)
+        w2 = jnp.ones((64, 16), jnp.float32)
+        eng = repro.sma_jit(model, options=repro.SMAOptions(mesh=mesh))
+        comm = eng.compile(x, w1, w2).report['comm']
+        assert comm['enabled'] and comm['grid'] == [2, 2], comm
+        assert comm['num_gemm_sites'] == 2, comm
+        want = sum(summa_comm_stats(8, n, k, pr=2, pc=2)['bytes_total']
+                   for (k, n) in ((32, 64), (64, 16)))
+        assert comm['bytes_total'] == want, (comm['bytes_total'], want)
+        assert comm['plan_comm_bytes'] == want, comm['plan_comm_bytes']
+        assert comm['predicted_overlap_fraction'] == 0.5, comm
+        assert comm['collectives_per_axis'] == {'data': 4, 'model': 4}
+        # single-device engine: honest zero-comm section
+        eng0 = repro.sma_jit(model)
+        comm0 = eng0.compile(x, w1, w2).report['comm']
+        assert not comm0['enabled'] and comm0['bytes_total'] == 0.0
+        print('COMM_RECONCILE_OK')
+    """, devices=4)
+    assert "COMM_RECONCILE_OK" in out
+
+
+def test_comm_lane_in_trace():
+    """Collective launches land on the obs ``comm`` lane in Chrome traces."""
+    out = run_subprocess("""
+        import jax.numpy as jnp, numpy as np
+        import repro
+        from repro.launch.mesh import fake_mesh
+        from repro.distributed import sma_gemm_sharded
+        from repro.obs.export import LANES
+        mesh = fake_mesh(4)
+        a = jnp.ones((8, 32), jnp.float32)
+        b = jnp.ones((32, 16), jnp.float32)
+        with repro.profile() as prof:
+            sma_gemm_sharded(a, b, mesh=mesh)
+        events = prof.chrome_trace()['traceEvents']
+        lanes = {ev['args']['name'] for ev in events
+                 if ev['ph'] == 'M' and ev['name'] == 'thread_name'}
+        assert 'comm mode' in lanes, lanes
+        bcasts = [e for e in events
+                  if e.get('ph') == 'X' and e['name'].startswith('comm.bcast')]
+        assert bcasts and all(e['tid'] == LANES['comm'] for e in bcasts)
+        assert all(e['args']['bytes'] > 0 for e in bcasts)
+        outer = [e for e in events
+                 if e['name'] == 'distributed.sma_gemm_sharded']
+        assert len(outer) == 1 and outer[0]['args']['grid'] == [2, 2]
+        print('COMM_LANE_OK')
+    """, devices=4)
+    assert "COMM_LANE_OK" in out
