@@ -37,9 +37,15 @@ _API_EXPORTS = {
 #: Chrome trace.  Off by default; never part of any compile-cache key.
 _OBS_EXPORTS = {"profile"}
 
-_SUBPACKAGES = ("compiler", "backends", "obs")
+#: Resilience front door: ``with repro.inject_faults("sma_gemm@interpret:"
+#: "runtime_error"): ...`` scopes a deterministic chaos schedule; the rest
+#: of the subsystem lives under ``repro.resilience``.
+_RESILIENCE_EXPORTS = {"inject_faults", "FaultSpec"}
 
-__all__ = sorted(_API_EXPORTS | _OBS_EXPORTS) + list(_SUBPACKAGES)
+_SUBPACKAGES = ("compiler", "backends", "obs", "resilience")
+
+__all__ = sorted(_API_EXPORTS | _OBS_EXPORTS | _RESILIENCE_EXPORTS) \
+    + list(_SUBPACKAGES)
 
 
 def __getattr__(name: str) -> Any:
@@ -49,6 +55,9 @@ def __getattr__(name: str) -> Any:
     if name in _OBS_EXPORTS:
         import repro.obs as _obs
         return getattr(_obs, name)
+    if name in _RESILIENCE_EXPORTS:
+        import repro.resilience as _resilience
+        return getattr(_resilience, name)
     if name in _SUBPACKAGES:
         import importlib
         return importlib.import_module(f"repro.{name}")

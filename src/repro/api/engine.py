@@ -38,6 +38,7 @@ Example::
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import time
@@ -48,6 +49,8 @@ import jax
 from repro.api.options import SMAOptions, resolve_options
 from repro.obs import metrics as _metrics
 from repro.obs import trace as _obs_trace
+from repro.resilience import faults as _faults
+from repro.resilience import guard as _res_guard
 
 try:  # jax>=0.4 keeps this in api_util
     from jax.api_util import shaped_abstractify as _abstractify
@@ -83,6 +86,7 @@ class EngineStats:
 
     hits: int = 0
     misses: int = 0
+    evictions: int = 0
     compile_time_s: float = 0.0
 
     @property
@@ -101,6 +105,7 @@ class EngineStats:
 
     def asdict(self) -> Dict[str, Any]:
         return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
                 "calls": self.calls, "hit_rate": self.hit_rate,
                 "compile_time_s": self.compile_time_s,
                 "amortized_compile_s": self.amortized_compile_s}
@@ -111,6 +116,13 @@ class _CacheEntry:
     compiled: Any                  # compiler.dispatch.CompiledModel
     hits: int = 0
     compile_time_s: float = 0.0
+
+
+#: The engine-boundary ``check_numerics="fallback"`` overlay: recompute the
+#: whole call on the pure reference path, with the guard off (the recompute
+#: must not recurse) and fusion off (the spatially-decoupled baseline).
+_REFERENCE_FALLBACK = SMAOptions(backend="xla", interpret=False,
+                                 fuse_runtime=False, check_numerics="off")
 
 
 class Engine:
@@ -134,7 +146,10 @@ class Engine:
         self.static_argnames = tuple(static_argnames)
         self.name = name or getattr(fn, "__name__", None) or "model"
         self.stats = EngineStats()
-        self._cache: Dict[Any, _CacheEntry] = {}
+        # Insertion/use-ordered: ``max_cache_entries`` evicts from the front
+        # (least recently used), hits ``move_to_end``.
+        self._cache: "collections.OrderedDict[Any, _CacheEntry]" = \
+            collections.OrderedDict()
 
     # ------------------------------------------------------------- keying
     def _split_static(self, kwargs: Dict[str, Any]):
@@ -158,25 +173,30 @@ class Engine:
                 opts.cache_key())
 
     # ------------------------------------------------------------ compile
-    def _lookup(self, args, kwargs
-                ) -> Tuple[_CacheEntry, Dict[str, Any], bool]:
-        opts = resolve_options(self.options)
+    def _lookup(self, args, kwargs, overlay: Optional[SMAOptions] = None
+                ) -> Tuple[_CacheEntry, Dict[str, Any], bool, SMAOptions]:
+        opts = resolve_options(self.options, overlay)
         static, dyn_kwargs = self._split_static(kwargs)
         key = self._key(args, dyn_kwargs, static, opts)
         entry = self._cache.get(key)
         if entry is not None:
             # Hot path: counters only — report stamping happens lazily when
             # the report is read (CompiledModel.report refresh hook).
+            self._cache.move_to_end(key)
             self.stats.hits += 1
             entry.hits += 1
             _metrics.inc("engine.cache_hits")
-            return entry, dyn_kwargs, True
+            return entry, dyn_kwargs, True, opts
 
         from repro.compiler.dispatch import compile_with_options
         fn = functools.partial(self.fn, **static) if static else self.fn
         t0 = time.perf_counter()
         with _obs_trace.span("engine.compile", cat="engine",
-                             engine=self.name):
+                             engine=self.name), _faults.compile_scope():
+            # Compile-time fault probe: ``engine.compile`` specs (kind
+            # compile_error via the scope above, or runtime_error/latency)
+            # model a signature whose kernels fail to build.
+            _faults.maybe_raise("engine.compile", self.name)
             compiled = compile_with_options(fn, *args, name=self.name,
                                             options=opts, **dyn_kwargs)
         dt = time.perf_counter() - t0
@@ -191,7 +211,12 @@ class Engine:
         self.stats.compile_time_s += dt
         _metrics.inc("engine.cache_misses")
         _metrics.observe("engine.compile_s", dt)
-        return entry, dyn_kwargs, False
+        limit = opts.max_cache_entries or 0
+        while limit > 0 and len(self._cache) > limit:
+            self._cache.popitem(last=False)
+            self.stats.evictions += 1
+            _metrics.inc("engine.cache_evictions")
+        return entry, dyn_kwargs, False, opts
 
     def _refresh_report(self, entry: _CacheEntry,
                         rep: Dict[str, Any]) -> None:
@@ -212,18 +237,41 @@ class Engine:
         tracer = _obs_trace.last_tracer()
         if tracer is not None and tracer.events:
             rep["runtime"] = tracer.runtime_section()
+        rep["resilience"] = _res_guard.resilience_section()
 
     # ------------------------------------------------------------- public
+    def _run(self, args, kwargs,
+             overlay: Optional[SMAOptions] = None) -> Tuple[Any, bool]:
+        """Lookup + execute + engine-boundary numeric guard.
+
+        The guard here sees *concrete* outputs even under ``jit=True``
+        (kernel-site checks are skipped on tracers), so ``check_numerics=
+        "fallback"`` can recompute the whole call on the reference path —
+        done via a re-lookup with an ``xla`` overlay, which compiles (and
+        caches) its own entry and never recurses further.
+        """
+        entry, dyn_kwargs, hit, opts = self._lookup(args, kwargs, overlay)
+        out = entry.compiled(*args, **dyn_kwargs)
+        policy = opts.check_numerics
+        if policy in (None, "off"):
+            return out, hit
+        recompute = None
+        if overlay is None:
+            recompute = lambda: self._run(args, kwargs,  # noqa: E731
+                                          _REFERENCE_FALLBACK)[0]
+        out = _res_guard.check_numerics_value(
+            f"engine.{self.name}", "engine", out, recompute, policy)
+        return out, hit
+
     def __call__(self, *args, **kwargs):
         tracer = _obs_trace.current_tracer()
         if tracer is None:
-            entry, dyn_kwargs, _ = self._lookup(args, kwargs)
-            return entry.compiled(*args, **dyn_kwargs)
+            return self._run(args, kwargs)[0]
         with tracer.span("engine.call", cat="engine",
                          engine=self.name) as sp:
-            entry, dyn_kwargs, hit = self._lookup(args, kwargs)
+            out, hit = self._run(args, kwargs)
             sp.annotate(cache="hit" if hit else "miss")
-            return sp.block(entry.compiled(*args, **dyn_kwargs))
+            return sp.block(out)
 
     def compile(self, *args, **kwargs):
         """Compile (or fetch) the executable for this signature WITHOUT

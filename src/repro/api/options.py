@@ -77,11 +77,27 @@ class SMAOptions:
       * ``policy`` — a pre-built ``SMAPolicy`` escape hatch (wins over the
         two knobs above).
 
+    resilience
+      * ``check_numerics`` — numeric-guard policy for kernel/engine outputs:
+        ``"off"`` (default) | ``"log"`` (warn once, keep the value) |
+        ``"raise"`` (``FloatingPointError``) | ``"fallback"`` (recompute the
+        site — and, at the engine boundary, the whole call — on the
+        reference ``xla`` path, counting the event).  Checks run on
+        concrete outputs; abstract tracer values are skipped at kernel
+        sites and re-checked at the engine boundary where outputs are
+        concrete.
+
     trace / engine
       * ``max_scan_unroll`` — scans at most this long unroll during lowering.
       * ``jit`` — wrap the dispatched executable in ``jax.jit`` (the serving
         configuration: pay one XLA compile per signature, then native-speed
         steady state).
+      * ``max_cache_entries`` — bound the engine's compile cache: beyond
+        this many cached executables the least-recently-used entry is
+        evicted (counted in ``EngineStats.evictions`` and
+        ``engine.cache_evictions``), so ragged-traffic signature churn
+        cannot grow memory without limit.  ``0`` (the default) means
+        unbounded.
       * ``donate_argnums`` — top-level positional arguments whose buffers
         XLA may reuse for outputs (``jax.jit`` donation; the train-step
         configuration so params/optimizer state update in place).  Only
@@ -113,6 +129,8 @@ class SMAOptions:
     max_scan_unroll: Optional[int] = None
     jit: Optional[bool] = None
     donate_argnums: Optional[Tuple[int, ...]] = None
+    check_numerics: Optional[str] = None
+    max_cache_entries: Optional[int] = None
     block_m: Optional[int] = None
     block_n: Optional[int] = None
     block_k: Optional[int] = None
@@ -125,10 +143,16 @@ class SMAOptions:
         # (natural at call sites) normalizes to a tuple.
         if isinstance(self.backend, list):
             object.__setattr__(self, "backend", tuple(self.backend))
+        if self.check_numerics not in (None, "off", "log", "raise",
+                                       "fallback"):
+            raise ValueError(
+                f"check_numerics={self.check_numerics!r} (one of "
+                f"'off' | 'log' | 'raise' | 'fallback')")
 
     _FIELDS = ("backend", "interpret", "autotune", "precision",
                "fuse_runtime", "fuse_epilogues", "max_epilogue_ops",
                "max_scan_unroll", "jit", "donate_argnums",
+               "check_numerics", "max_cache_entries",
                "block_m", "block_n", "block_k", "policy",
                "mesh", "mesh_rules")
 
@@ -198,6 +222,8 @@ DEFAULTS = SMAOptions(
     max_scan_unroll=8,
     jit=False,
     donate_argnums=None,
+    check_numerics="off",
+    max_cache_entries=0,
     block_m=None,
     block_n=None,
     block_k=None,

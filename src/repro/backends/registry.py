@@ -32,6 +32,7 @@ from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple, Union
 from repro.backends.base import Backend, FallbackReason, OpSite
 from repro.core.modes import BACKEND_LADDER, ExecMode
 from repro.obs import metrics as _metrics
+from repro.resilience import quarantine as _quarantine
 
 __all__ = [
     "register_backend", "unregister_backend", "get_backend",
@@ -141,6 +142,16 @@ def select_backend(site: OpSite, preference: Preference = None,
     for i, name in enumerate(ladder):
         backend = get_backend(name)
         verdict = backend.supports(site)
+        if verdict is True:
+            # Statically capable, but runtime-quarantined tuples (the
+            # failover guard denylists (op, signature, backend) after a
+            # runtime failure) are skipped so repeat calls go straight to
+            # the healthy rung with zero retry attempts.
+            q_reason = _quarantine.blocked_reason(site.op, site.shapes,
+                                                  site.dtypes, name)
+            if q_reason is not None:
+                verdict = FallbackReason(q_reason)
+                _metrics.inc("resilience.quarantine_skips")
         if verdict is True:
             chosen = backend
             break

@@ -276,6 +276,7 @@ class _Interpreter:
         return dict(backend=self.backend, interpret=self.interpret,
                     autotune=bool(o.autotune), block_m=o.block_m,
                     block_n=o.block_n, block_k=o.block_k,
+                    check_numerics=o.check_numerics,
                     mesh=o.mesh if o.mesh is not None else False)
 
     def _dot(self, eqn, invals):
@@ -524,6 +525,8 @@ def compile_with_options(fn: Callable, *args, name: Optional[str] = None,
     report["comm"] = comm_section(
         o.mesh, collect_comm_sites(traced.jaxpr, rewritten),
         plan_comm_bytes=program.total_comm_bytes)
+    from repro.resilience import guard as _resilience_guard
+    report["resilience"] = _resilience_guard.resilience_section()
     return CompiledModel(traced=traced, plan=plan, report_data=report,
                          _runner=runner, rewritten=rewritten, options=o)
 

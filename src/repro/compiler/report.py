@@ -299,6 +299,20 @@ def render_text(report: Dict[str, Any]) -> str:
             f"{rt['switch_overhead_us'] / 1e3:.2f} ms switch overhead")
         lines.extend("    " + ln
                      for ln in render_mode_timeline(rt).splitlines())
+    res = report.get("resilience")
+    if res and res.get("enabled"):
+        lines.append(
+            f"  resilience             : "
+            f"{res['runtime_fallbacks']} runtime fallbacks "
+            f"({res['failover_attempts']} failover attempts), "
+            f"{res['numeric_events']} numeric events "
+            f"({res['numeric_fallbacks']} recomputed), "
+            f"quarantine {len(res['quarantine'])} entries "
+            f"({res['quarantine_skips']} skips)")
+        if res.get("injected_faults"):
+            injected = ", ".join(f"{k}={v}" for k, v in
+                                 sorted(res["injected_faults"].items()))
+            lines.append(f"  injected faults        : {injected}")
     return "\n".join(lines)
 
 

@@ -44,6 +44,8 @@ from repro.api.options import current_options
 from repro.backends import base as _base
 from repro.backends import registry as _registry
 from repro.obs import trace as _obs_trace
+from repro.resilience import faults as _faults
+from repro.resilience import guard as _guard
 
 #: Back-compat aliases: these memory-representative XLA paths lived here
 #: before the backend registry re-homed them into
@@ -85,12 +87,43 @@ def _knobs(**explicit: Any) -> Dict[str, Any]:
     return out
 
 
-def _select(op: str, args: Tuple[Any, ...], backend: Any, interpret: bool,
-            **extras: Any) -> _base.Backend:
-    """Registry resolution for one call site (capability-checked ladder)."""
-    site = _base.OpSite.from_args(op, args, **extras)
-    chosen, _ = _registry.select_backend(site, backend, interpret)
-    return chosen
+def _guarded(op: str, site_args: Tuple[Any, ...], backend: Any,
+             interpret: bool, make_call, *, attrs: Any = None,
+             check_numerics: Optional[str] = None,
+             recompute=None, **extras: Any):
+    """Failover-guarded kernel launch — the runtime half of the paper's
+    in-situ mode switch.
+
+    Resolves the site down its backend-preference ladder
+    (:func:`repro.backends.registry.select_backend`, which also skips
+    quarantined rungs), fires any injected faults, and catches
+    runtime-class failures (``XlaRuntimeError``/OOM, ``NotImplementedError``,
+    injected chaos — see :func:`repro.resilience.guard.is_runtime_failure`):
+    the failing ``(op, signature, backend)`` tuple is quarantined so later
+    calls skip it with zero retry attempts, and the launch retries on the
+    next rung, always terminating on the universal ``xla`` backend (whose
+    failures, and every non-runtime-class error, propagate).  Outputs pass
+    through the ``check_numerics`` numeric guard.
+    """
+    site = _base.OpSite.from_args(op, site_args, **extras)
+    ladder: Any = _registry.normalize_preference(backend, interpret)
+    while True:
+        be, _ = _registry.select_backend(site, ladder)
+        try:
+            _faults.maybe_raise(op, be.name)
+            span_attrs = attrs(be) if callable(attrs) else dict(attrs or {})
+            out = _launch(op, be, make_call(be), **span_attrs)
+            out = _faults.corrupt(op, be.name, out)
+        except Exception as exc:
+            if be.name == "xla" or not _guard.is_runtime_failure(exc):
+                raise
+            ladder = _guard.next_rung(ladder, be.name)
+            _guard.note_runtime_fallback(op, site, be.name, exc,
+                                         retry_on=ladder)
+            continue
+        return _guard.check_numerics_value(
+            op, be.name, out,
+            recompute if be.name != "xla" else None, check_numerics)
 
 
 def _launch(op: str, be: _base.Backend, call, **attrs: Any):
@@ -132,7 +165,8 @@ def sma_gemm(a: jax.Array, b: jax.Array, *,
              block_m: Optional[int] = None, block_n: Optional[int] = None,
              block_k: Optional[int] = None,
              autotune: Optional[bool] = None,
-             mesh: Any = None) -> jax.Array:
+             mesh: Any = None,
+             check_numerics: Optional[str] = None) -> jax.Array:
     """Fused GEMM + bias + activation (the LSMA macro-op).
 
     Every knob left unset (``None``) resolves from the ambient
@@ -150,8 +184,9 @@ def sma_gemm(a: jax.Array, b: jax.Array, *,
     """
     kn = _knobs(backend=backend, interpret=interpret, precision=precision,
                 block_m=block_m, block_n=block_n, block_k=block_k,
-                autotune=autotune, mesh=mesh)
+                autotune=autotune, mesh=mesh, check_numerics=check_numerics)
     mesh_kn = kn.pop("mesh")
+    checknum = kn.pop("check_numerics")
     if _mesh_routable(a, b, mesh_kn):
         from repro.distributed.summa import sma_gemm_sharded
         return sma_gemm_sharded(a, b, mesh=mesh_kn, bias=bias,
@@ -162,28 +197,40 @@ def sma_gemm(a: jax.Array, b: jax.Array, *,
                                 interpret=kn["interpret"],
                                 block_m=kn["block_m"], block_n=kn["block_n"],
                                 block_k=kn["block_k"])
-    be = _select("sma_gemm", (a, b), kn.pop("backend"), kn.pop("interpret"))
+    pref, interp = kn.pop("backend"), kn.pop("interpret")
 
-    def call():
-        return be.op("sma_gemm")(a, b, bias=bias, epilogue=epilogue,
-                                 accum_dtype=accum_dtype, **kn)
+    def make_call(be):
+        return lambda: be.op("sma_gemm")(a, b, bias=bias, epilogue=epilogue,
+                                         accum_dtype=accum_dtype, **kn)
 
-    if _obs_trace.current_tracer() is None:
-        return call()
-    m = 1
-    for d in a.shape[:-1]:
-        m *= int(d)
-    n, k = int(b.shape[-1]), int(b.shape[0])
-    attrs: Dict[str, Any] = {"m": m, "n": n, "k": k,
-                             "epilogue": epilogue,
-                             "autotune": kn["autotune"]}
-    if be.name != "xla":
-        # The kernel backends tile; record the blocks the launch resolves
-        # to (explicit knobs win, heuristic table fills the rest).
-        from repro.kernels import autotune as _autotune
-        attrs["blocks"] = list(_autotune.resolve_blocks(
-            m, n, k, a.dtype, kn["block_m"], kn["block_n"], kn["block_k"]))
-    return _launch("sma_gemm", be, call, **attrs)
+    def attrs(be):
+        if _obs_trace.current_tracer() is None:
+            return {}
+        m = 1
+        for d in a.shape[:-1]:
+            m *= int(d)
+        n, k = int(b.shape[-1]), int(b.shape[0])
+        out: Dict[str, Any] = {"m": m, "n": n, "k": k,
+                               "epilogue": epilogue,
+                               "autotune": kn["autotune"]}
+        if be.name != "xla":
+            # The kernel backends tile; record the blocks the launch
+            # resolves to (explicit knobs win, heuristic table fills the
+            # rest).
+            from repro.kernels import autotune as _autotune
+            out["blocks"] = list(_autotune.resolve_blocks(
+                m, n, k, a.dtype, kn["block_m"], kn["block_n"],
+                kn["block_k"]))
+        return out
+
+    def recompute():
+        return _registry.get_backend("xla").op("sma_gemm")(
+            a, b, bias=bias, epilogue=epilogue, accum_dtype=accum_dtype,
+            **kn)
+
+    return _guarded("sma_gemm", (a, b), pref, interp, make_call,
+                    attrs=attrs, check_numerics=checknum,
+                    recompute=recompute)
 
 
 def rmsnorm_gemm(x: jax.Array, scale: jax.Array, w: jax.Array, *,
@@ -192,20 +239,29 @@ def rmsnorm_gemm(x: jax.Array, scale: jax.Array, w: jax.Array, *,
                  interpret: Optional[bool] = None,
                  precision=None,
                  block_m: Optional[int] = None, block_n: Optional[int] = None,
-                 block_k: Optional[int] = None) -> jax.Array:
+                 block_k: Optional[int] = None,
+                 check_numerics: Optional[str] = None) -> jax.Array:
     """Fused SIMD-prologue norm + systolic GEMM (SMA prologue fusion).
 
     Unset knobs resolve from the ambient options, as in :func:`sma_gemm`.
     """
     kn = _knobs(backend=backend, interpret=interpret, precision=precision,
-                block_m=block_m, block_n=block_n, block_k=block_k)
-    be = _select("rmsnorm_gemm", (x, scale, w),
-                 kn.pop("backend"), kn.pop("interpret"))
-    return _launch("rmsnorm_gemm", be,
-                   lambda: be.op("rmsnorm_gemm")(x, scale, w,
-                                                 epilogue=epilogue, eps=eps,
-                                                 **kn),
-                   epilogue=epilogue)
+                block_m=block_m, block_n=block_n, block_k=block_k,
+                check_numerics=check_numerics)
+    checknum = kn.pop("check_numerics")
+    pref, interp = kn.pop("backend"), kn.pop("interpret")
+
+    def make_call(be):
+        return lambda: be.op("rmsnorm_gemm")(x, scale, w, epilogue=epilogue,
+                                             eps=eps, **kn)
+
+    def recompute():
+        return _registry.get_backend("xla").op("rmsnorm_gemm")(
+            x, scale, w, epilogue=epilogue, eps=eps, **kn)
+
+    return _guarded("rmsnorm_gemm", (x, scale, w), pref, interp, make_call,
+                    attrs={"epilogue": epilogue}, check_numerics=checknum,
+                    recompute=recompute)
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -218,14 +274,13 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     xla_chunk: int = 1024) -> jax.Array:
     """Online-softmax attention (train/prefill)."""
     kn = _knobs(backend=backend, interpret=interpret)
-    be = _select("flash_attention", (q, k, v),
-                 kn.pop("backend"), kn.pop("interpret"))
-    return _launch("flash_attention", be,
-                   lambda: be.op("flash_attention")(
-                       q, k, v, causal=causal, window=window, scale=scale,
-                       block_q=block_q, block_kv=block_kv, unroll=unroll,
-                       xla_chunk=xla_chunk),
-                   blocks=[block_q, block_kv], causal=causal)
+    return _guarded(
+        "flash_attention", (q, k, v), kn["backend"], kn["interpret"],
+        lambda be: lambda: be.op("flash_attention")(
+            q, k, v, causal=causal, window=window, scale=scale,
+            block_q=block_q, block_kv=block_kv, unroll=unroll,
+            xla_chunk=xla_chunk),
+        attrs={"blocks": [block_q, block_kv], "causal": causal})
 
 
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
@@ -236,13 +291,12 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      block_s: int = 512) -> jax.Array:
     """Single-token GQA attention over a KV cache (decode)."""
     kn = _knobs(backend=backend, interpret=interpret)
-    be = _select("decode_attention", (q, k_cache, v_cache),
-                 kn.pop("backend"), kn.pop("interpret"))
-    return _launch("decode_attention", be,
-                   lambda: be.op("decode_attention")(
-                       q, k_cache, v_cache, cache_len, scale=scale,
-                       block_s=block_s),
-                   blocks=[block_s])
+    return _guarded(
+        "decode_attention", (q, k_cache, v_cache), kn["backend"],
+        kn["interpret"],
+        lambda be: lambda: be.op("decode_attention")(
+            q, k_cache, v_cache, cache_len, scale=scale, block_s=block_s),
+        attrs={"blocks": [block_s]})
 
 
 def rglru_scan(a: jax.Array, u: jax.Array,
@@ -253,12 +307,11 @@ def rglru_scan(a: jax.Array, u: jax.Array,
                ) -> Tuple[jax.Array, jax.Array]:
     """Gated linear recurrence h_t = a_t h_{t-1} + u_t (RG-LRU core)."""
     kn = _knobs(backend=backend, interpret=interpret)
-    be = _select("rglru_scan", (a, u),
-                 kn.pop("backend"), kn.pop("interpret"))
-    return _launch("rglru_scan", be,
-                   lambda: be.op("rglru_scan")(a, u, h0, block_s=block_s,
+    return _guarded(
+        "rglru_scan", (a, u), kn["backend"], kn["interpret"],
+        lambda be: lambda: be.op("rglru_scan")(a, u, h0, block_s=block_s,
                                                block_d=block_d),
-                   blocks=[block_s, block_d])
+        attrs={"blocks": [block_s, block_d]})
 
 
 def mlstm_chunkwise(q: jax.Array, k: jax.Array, v: jax.Array,
@@ -276,11 +329,10 @@ def mlstm_chunkwise(q: jax.Array, k: jax.Array, v: jax.Array,
     capability check (identical math, tested allclose).
     """
     kn = _knobs(backend=backend, interpret=interpret)
-    be = _select("mlstm_chunkwise", (q, k, v),
-                 kn.pop("backend"), kn.pop("interpret"),
-                 return_state=return_state)
-    return _launch("mlstm_chunkwise", be,
-                   lambda: be.op("mlstm_chunkwise")(
-                       q, k, v, log_f, log_i, chunk=chunk, unroll=unroll,
-                       return_state=return_state),
-                   chunk=chunk, return_state=return_state)
+    return _guarded(
+        "mlstm_chunkwise", (q, k, v), kn["backend"], kn["interpret"],
+        lambda be: lambda: be.op("mlstm_chunkwise")(
+            q, k, v, log_f, log_i, chunk=chunk, unroll=unroll,
+            return_state=return_state),
+        attrs={"chunk": chunk, "return_state": return_state},
+        return_state=return_state)

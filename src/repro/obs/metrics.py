@@ -22,7 +22,7 @@ from __future__ import annotations
 import threading
 from typing import Any, Dict
 
-__all__ = ["MetricsRegistry", "METRICS", "inc", "observe", "snapshot",
+__all__ = ["MetricsRegistry", "METRICS", "inc", "get", "observe", "snapshot",
            "reset"]
 
 
@@ -37,6 +37,12 @@ class MetricsRegistry:
     def inc(self, name: str, n: float = 1) -> None:
         with self._lock:
             self._counters[name] = self._counters.get(name, 0) + n
+
+    def get(self, name: str) -> float:
+        """Current value of a counter (0 if it never incremented) — the
+        delta-assertion accessor the resilience tests lean on."""
+        with self._lock:
+            return self._counters.get(name, 0)
 
     def observe(self, name: str, value: float) -> None:
         value = float(value)
@@ -71,6 +77,7 @@ METRICS = MetricsRegistry()
 
 # Module-level conveniences bound to the global registry.
 inc = METRICS.inc
+get = METRICS.get
 observe = METRICS.observe
 snapshot = METRICS.snapshot
 reset = METRICS.reset

@@ -1,0 +1,48 @@
+"""``repro.resilience`` — fault injection, failover, and numeric guards.
+
+The runtime robustness layer of the SMA stack: the paper's in-situ
+reconfiguration, extended to *forced* reconfiguration — when a backend
+fails at runtime (compile-then-fail, OOM, NaN output, injected chaos), the
+launch site retries down its preference ladder instead of crashing, the
+failing ``(op, signature, backend)`` tuple is quarantined, and every event
+lands in metrics and the plan report's ``resilience`` section.
+
+Four pieces:
+
+* :mod:`repro.resilience.faults` — seeded, scoped fault injectors
+  (``with repro.inject_faults("sma_gemm@interpret:runtime_error"): ...``;
+  ``REPRO_FAULTS`` env hook for chaos CI).
+* :mod:`repro.resilience.quarantine` — the process-wide TTL'd denylist
+  ``select_backend`` consults, so repeated calls skip a failing backend
+  with zero retry attempts.
+* :mod:`repro.resilience.guard` — failure classification, failover
+  accounting, the ``check_numerics`` policy, and
+  :class:`~repro.resilience.guard.RetryPolicy` for failure-isolated
+  serving.
+* the failover loop itself lives at the launch sites in
+  :mod:`repro.kernels.ops`; the serving isolation in
+  :mod:`repro.launch.serve`.
+
+``repro.resilience.reset()`` clears quarantine + ledgers (recovery and test
+isolation).
+"""
+from repro.resilience.faults import (FaultSpec, InjectedFault, inject_faults,
+                                     parse_faults, reinstall_env_faults)
+from repro.resilience.guard import (EVENTS, RetryPolicy, check_numerics_value,
+                                    is_runtime_failure, resilience_section,
+                                    warn_once)
+from repro.resilience.guard import reset as _reset_guard
+from repro.resilience.quarantine import QUARANTINE, Quarantine
+
+__all__ = [
+    "FaultSpec", "InjectedFault", "inject_faults", "parse_faults",
+    "reinstall_env_faults",
+    "RetryPolicy", "check_numerics_value", "is_runtime_failure",
+    "resilience_section", "warn_once", "EVENTS",
+    "Quarantine", "QUARANTINE", "reset",
+]
+
+
+def reset() -> None:
+    """Clear quarantine, the event ledger, counters, and warn-once state."""
+    _reset_guard()

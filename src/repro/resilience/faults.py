@@ -1,0 +1,290 @@
+"""Deterministic, scoped fault injection — the chaos half of resilience.
+
+The paper's in-situ reconfiguration story only earns trust if the runtime
+degrades gracefully when a substrate *fails* mid-flight, and the only way to
+exercise every failover path on CPU CI is to inject the failures ourselves.
+This module provides seeded, scoped injectors:
+
+* :class:`FaultSpec` — one named fault: a *site* (a kernel entry point such
+  as ``"sma_gemm"``, or a driver site such as ``"serve.tick"`` /
+  ``"engine.compile"``), an optional backend qualifier, a *kind*, and firing
+  controls (``times``/``after``/``p``).
+* :func:`inject_faults` — a context manager pushing an injector for the
+  ``with`` scope (``with repro.inject_faults("sma_gemm@interpret:"
+  "runtime_error:times=1"): ...``).  Nested scopes stack; every probe
+  consults all active injectors.
+* ``REPRO_FAULTS`` — the environment hook: a process-wide base schedule
+  parsed once at first probe (CI's chaos leg sets this around the whole
+  test run).  :func:`reinstall_env_faults` re-reads it for tests.
+
+Kinds:
+
+``runtime_error``
+    Raise :class:`InjectedFault` at the launch site — stands in for an
+    ``XlaRuntimeError`` / OOM.  Caught by the failover guard in
+    :mod:`repro.kernels.ops`, which retries the site down the backend
+    ladder.
+``compile_error``
+    Same, but only fires inside a compile scope (the engine wraps
+    ``compile_with_options`` in :func:`compile_scope`) — models a kernel
+    that fails to compile rather than to run.
+``nan`` / ``inf``
+    Corrupt the launch output (every float leaf becomes NaN/Inf) — the
+    input the numeric guards exist for.
+``latency``
+    Sleep ``latency_s`` at the probe — a latency spike, for watchdog and
+    timeline tests.
+
+Determinism: probabilistic specs (``p < 1``) draw from a ``random.Random``
+seeded per injector, and ``times``/``after`` counters are per-spec — the
+same schedule replays identically, which is what makes chaos CI debuggable.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import os
+import random
+import time
+from typing import Any, Iterator, List, Optional, Sequence, Tuple, Union
+
+from repro.obs import metrics as _metrics
+
+__all__ = ["FaultSpec", "InjectedFault", "inject_faults", "parse_faults",
+           "maybe_raise", "corrupt", "compile_scope", "in_compile_scope",
+           "reinstall_env_faults", "active_specs"]
+
+KINDS = ("runtime_error", "compile_error", "nan", "inf", "latency")
+
+#: Kinds checked before the launch runs (may raise / sleep) vs after (corrupt
+#: the produced value).
+_PRE_KINDS = ("runtime_error", "compile_error", "latency")
+_POST_KINDS = ("nan", "inf")
+
+
+class InjectedFault(RuntimeError):
+    """Raised by an armed ``runtime_error`` / ``compile_error`` spec.
+
+    A *runtime-class* failure by definition: the failover guard treats it
+    exactly like an ``XlaRuntimeError`` escaping a real kernel.
+    """
+
+    def __init__(self, site: str, backend: Optional[str], kind: str) -> None:
+        super().__init__(f"injected {kind} at {site}"
+                         + (f"@{backend}" if backend else ""))
+        self.site = site
+        self.backend = backend
+        self.kind = kind
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """One injectable fault.
+
+    ``site`` matches the probe's site name exactly (``"*"`` matches any);
+    ``backend`` of ``None`` matches any backend.  ``times`` bounds how many
+    probes the spec fires on (``None`` = unlimited), ``after`` skips that
+    many matching probes first, and ``p`` fires probabilistically from the
+    injector's seeded RNG.
+    """
+
+    site: str
+    kind: str
+    backend: Optional[str] = None
+    times: Optional[int] = 1
+    after: int = 0
+    p: float = 1.0
+    latency_s: float = 0.001
+
+    def __post_init__(self) -> None:
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r} "
+                             f"(one of {KINDS})")
+        # firing state (per spec instance; replays deterministically)
+        self._seen = 0
+        self._fired = 0
+
+    def matches(self, site: str, backend: Optional[str]) -> bool:
+        if self.site != "*" and self.site != site:
+            return False
+        return self.backend is None or self.backend == backend
+
+    def arm(self, rng: random.Random) -> bool:
+        """Consume one matching probe; True when the fault fires."""
+        self._seen += 1
+        if self._seen <= self.after:
+            return False
+        if self.times is not None and self._fired >= self.times:
+            return False
+        if self.p < 1.0 and rng.random() >= self.p:
+            return False
+        self._fired += 1
+        return True
+
+
+def parse_faults(text: str) -> List[FaultSpec]:
+    """Parse the ``REPRO_FAULTS`` mini-language into specs.
+
+    Format (semicolon-separated)::
+
+        site[@backend]:kind[:key=value,key=value...]
+
+    e.g. ``"sma_gemm@interpret:runtime_error:times=1;serve.tick:latency:"
+    "times=10,latency_s=0.002"``.
+    """
+    specs: List[FaultSpec] = []
+    for chunk in text.split(";"):
+        chunk = chunk.strip()
+        if not chunk:
+            continue
+        parts = chunk.split(":")
+        if len(parts) < 2:
+            raise ValueError(f"fault spec {chunk!r} needs site:kind")
+        target, kind = parts[0], parts[1]
+        backend = None
+        if "@" in target:
+            target, backend = target.split("@", 1)
+        kwargs: dict = {}
+        if len(parts) > 2:
+            for kv in parts[2].split(","):
+                k, _, v = kv.partition("=")
+                k = k.strip()
+                if k in ("times", "after"):
+                    kwargs[k] = None if v == "none" else int(v)
+                elif k in ("p", "latency_s"):
+                    kwargs[k] = float(v)
+                else:
+                    raise ValueError(f"unknown fault param {k!r} in {chunk!r}")
+        specs.append(FaultSpec(site=target, kind=kind, backend=backend,
+                               **kwargs))
+    return specs
+
+
+class _Injector:
+    def __init__(self, specs: Sequence[FaultSpec], seed: int) -> None:
+        self.specs = list(specs)
+        self.rng = random.Random(seed)
+
+
+# Active injectors: a process-wide base (from REPRO_FAULTS, parsed lazily)
+# plus a contextvar stack pushed by ``inject_faults`` scopes.
+_ENV: Optional[Tuple[_Injector, ...]] = None
+_STACK: contextvars.ContextVar[Tuple[_Injector, ...]] = \
+    contextvars.ContextVar("repro_fault_injectors", default=())
+
+
+def _env_injectors() -> Tuple[_Injector, ...]:
+    global _ENV
+    if _ENV is None:
+        raw = os.environ.get("REPRO_FAULTS", "").strip()
+        _ENV = (_Injector(parse_faults(raw), seed=0),) if raw else ()
+    return _ENV
+
+
+def reinstall_env_faults() -> None:
+    """Re-read ``REPRO_FAULTS`` (tests change the environment mid-process)."""
+    global _ENV
+    _ENV = None
+
+
+def _active() -> Tuple[_Injector, ...]:
+    return _env_injectors() + _STACK.get()
+
+
+def active_specs() -> List[FaultSpec]:
+    """Every spec currently in scope (env base + ``inject_faults`` stack)."""
+    return [s for inj in _active() for s in inj.specs]
+
+
+@contextlib.contextmanager
+def inject_faults(specs: Union[str, FaultSpec, Sequence[FaultSpec]],
+                  *, seed: int = 0) -> Iterator[List[FaultSpec]]:
+    """Scope a deterministic fault schedule.
+
+    ``specs`` is a spec string (see :func:`parse_faults`), one
+    :class:`FaultSpec`, or a sequence of them.  Firing counters live on the
+    spec objects, so a schedule is consumed once per ``with`` entry.
+    """
+    if isinstance(specs, str):
+        specs = parse_faults(specs)
+    elif isinstance(specs, FaultSpec):
+        specs = [specs]
+    inj = _Injector(specs, seed)
+    token = _STACK.set(_STACK.get() + (inj,))
+    try:
+        yield inj.specs
+    finally:
+        _STACK.reset(token)
+
+
+# --------------------------------------------------------------------------
+# Compile scope (gates ``compile_error`` kinds)
+# --------------------------------------------------------------------------
+_COMPILING: contextvars.ContextVar[bool] = \
+    contextvars.ContextVar("repro_fault_compile_scope", default=False)
+
+
+@contextlib.contextmanager
+def compile_scope() -> Iterator[None]:
+    """Mark the scope as compile-time: ``compile_error`` specs fire only
+    inside it (the engine wraps its compile pipeline in this)."""
+    token = _COMPILING.set(True)
+    try:
+        yield
+    finally:
+        _COMPILING.reset(token)
+
+
+def in_compile_scope() -> bool:
+    return _COMPILING.get()
+
+
+# --------------------------------------------------------------------------
+# Probes (called from the guarded launch path)
+# --------------------------------------------------------------------------
+def maybe_raise(site: str, backend: Optional[str] = None) -> None:
+    """Pre-launch probe: fire any armed raise/latency spec for this site."""
+    injectors = _active()
+    if not injectors:
+        return
+    for inj in injectors:
+        for spec in inj.specs:
+            if spec.kind not in _PRE_KINDS or not spec.matches(site, backend):
+                continue
+            if spec.kind == "compile_error" and not in_compile_scope():
+                continue
+            if not spec.arm(inj.rng):
+                continue
+            _metrics.inc(f"resilience.injected.{spec.kind}")
+            if spec.kind == "latency":
+                time.sleep(spec.latency_s)
+                continue
+            raise InjectedFault(site, backend, spec.kind)
+
+
+def corrupt(site: str, backend: Optional[str], value: Any) -> Any:
+    """Post-launch probe: replace float leaves with NaN/Inf when armed."""
+    injectors = _active()
+    if not injectors:
+        return value
+    fill = None
+    for inj in injectors:
+        for spec in inj.specs:
+            if spec.kind not in _POST_KINDS or not spec.matches(site, backend):
+                continue
+            if not spec.arm(inj.rng):
+                continue
+            _metrics.inc(f"resilience.injected.{spec.kind}")
+            fill = float("nan") if spec.kind == "nan" else float("inf")
+    if fill is None:
+        return value
+    import jax
+    import jax.numpy as jnp
+
+    def poison(leaf):
+        if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.inexact):
+            return jnp.full_like(leaf, fill)
+        return leaf
+
+    return jax.tree_util.tree_map(poison, value)

@@ -1,0 +1,107 @@
+"""Process-wide quarantine denylist for failing (op, signature, backend).
+
+When a backend fails a kernel launch at *runtime* (after its static
+capability check said yes), retrying it on every subsequent call would pay
+the failure cost each time.  The failover guard instead quarantines the
+``(op, shapes, dtypes, backend)`` tuple here; the registry's
+``select_backend`` consults :func:`blocked_reason` and skips a quarantined
+rung with a ``quarantine:...`` fallback reason, so later calls go straight
+to the healthy backend with zero retry attempts.
+
+Entries expire after a TTL (the substrate may recover — a transient OOM, a
+driver hiccup), and :func:`reset` clears everything so recovery is testable.
+Dependency-free on purpose: the backend registry imports this module.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+__all__ = ["Quarantine", "QUARANTINE", "add", "blocked_reason", "entries",
+           "reset"]
+
+#: Default quarantine lifetime.  Long enough that a steady-state serving
+#: loop skips the bad rung for a useful while; short enough that a
+#: recovered substrate gets re-tried without a restart.
+DEFAULT_TTL_S = 300.0
+
+Key = Tuple[str, Tuple[Tuple[int, ...], ...], Tuple[str, ...], str]
+
+
+class Quarantine:
+    """TTL'd denylist of runtime-failing (op, signature, backend) tuples."""
+
+    def __init__(self, default_ttl_s: float = DEFAULT_TTL_S) -> None:
+        self.default_ttl_s = default_ttl_s
+        self._lock = threading.Lock()
+        # key -> (expiry monotonic time or None for no expiry, reason)
+        self._entries: Dict[Key, Tuple[Optional[float], str]] = {}
+
+    @staticmethod
+    def key_for(op: str, shapes: Any, dtypes: Any, backend: str) -> Key:
+        return (op, tuple(tuple(s) for s in shapes), tuple(dtypes), backend)
+
+    def add(self, op: str, shapes: Any, dtypes: Any, backend: str, *,
+            reason: str = "runtime failure",
+            ttl_s: Optional[float] = None) -> None:
+        ttl = self.default_ttl_s if ttl_s is None else ttl_s
+        expiry = None if ttl is None else time.monotonic() + ttl
+        with self._lock:
+            self._entries[self.key_for(op, shapes, dtypes, backend)] = \
+                (expiry, reason)
+
+    def blocked_reason(self, op: str, shapes: Any, dtypes: Any,
+                       backend: str) -> Optional[str]:
+        """The quarantine reason when this tuple is denylisted, else None.
+        Expired entries are purged on lookup."""
+        key = self.key_for(op, shapes, dtypes, backend)
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None:
+                return None
+            expiry, reason = entry
+            if expiry is not None and time.monotonic() >= expiry:
+                del self._entries[key]
+                return None
+            return f"quarantine:'{backend}' quarantined for {op} ({reason})"
+
+    def entries(self) -> List[Dict[str, Any]]:
+        """JSON-safe listing (for the plan report's resilience section)."""
+        now = time.monotonic()
+        out = []
+        with self._lock:
+            for (op, shapes, dtypes, backend), (expiry, reason) in \
+                    self._entries.items():
+                if expiry is not None and now >= expiry:
+                    continue
+                out.append({
+                    "op": op,
+                    "shapes": [list(s) for s in shapes],
+                    "dtypes": list(dtypes),
+                    "backend": backend,
+                    "reason": reason,
+                    "expires_in_s": None if expiry is None
+                    else round(expiry - now, 3),
+                })
+        return out
+
+    def reset(self) -> None:
+        with self._lock:
+            self._entries.clear()
+
+    def __len__(self) -> int:
+        now = time.monotonic()
+        with self._lock:
+            return sum(1 for expiry, _ in self._entries.values()
+                       if expiry is None or now < expiry)
+
+
+#: The process-wide quarantine (one denylist per process, like the backend
+#: registry it gates).
+QUARANTINE = Quarantine()
+
+add = QUARANTINE.add
+blocked_reason = QUARANTINE.blocked_reason
+entries = QUARANTINE.entries
+reset = QUARANTINE.reset

@@ -1,0 +1,509 @@
+"""Resilience tests: deterministic fault injection, runtime backend
+failover + quarantine, numeric guards, engine LRU, and failure-isolated
+serving under chaos."""
+import json
+import os
+import time
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+import repro.configs as C
+import repro.resilience as res
+from repro.backends.base import Backend
+from repro.backends.registry import register_backend, unregister_backend
+from repro.compiler.report import render_text
+from repro.core.modes import ExecMode
+from repro.kernels import ops, ref
+from repro.launch.serve import Request, Server
+from repro.models import lm
+from repro.obs import metrics
+from repro.resilience import faults, guard, quarantine
+from repro.resilience.guard import RetryPolicy
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True)
+def _reset_resilience():
+    """Quarantine/ledgers are process-wide by design; isolate every test."""
+    res.reset()
+    yield
+    res.reset()
+    faults.reinstall_env_faults()
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _metrics_artifact():
+    """Chaos CI sets REPRO_METRICS_OUT; dump the process metrics snapshot
+    there at session end (uploaded as the run's artifact)."""
+    yield
+    out = os.environ.get("REPRO_METRICS_OUT")
+    if out:
+        with open(out, "w") as f:
+            json.dump(metrics.snapshot(), f, indent=2, sort_keys=True)
+
+
+def _ab(m=16, k=32, n=8):
+    rng = np.random.RandomState(0)
+    return (jnp.asarray(rng.randn(m, k).astype(np.float32)),
+            jnp.asarray(rng.randn(k, n).astype(np.float32)))
+
+
+# ---------------------------------------------------------------------------
+# Fault specs + injectors
+# ---------------------------------------------------------------------------
+class TestFaults:
+    def test_parse_mini_language(self):
+        specs = faults.parse_faults(
+            "sma_gemm@interpret:runtime_error:times=2,after=1;"
+            "serve.tick:latency:latency_s=0.005,p=0.5;"
+            "*:nan:times=none")
+        assert len(specs) == 3
+        a, b, c = specs
+        assert (a.site, a.backend, a.kind, a.times, a.after) == \
+            ("sma_gemm", "interpret", "runtime_error", 2, 1)
+        assert (b.site, b.backend, b.kind) == ("serve.tick", None, "latency")
+        assert b.latency_s == pytest.approx(0.005)
+        assert b.p == pytest.approx(0.5)
+        assert (c.site, c.times) == ("*", None)
+
+    def test_parse_rejects_bad_specs(self):
+        with pytest.raises(ValueError, match="needs site:kind"):
+            faults.parse_faults("just-a-site")
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            faults.parse_faults("x:explode")
+        with pytest.raises(ValueError, match="unknown fault param"):
+            faults.parse_faults("x:nan:bogus=1")
+
+    def test_times_and_after_budget(self):
+        spec = faults.FaultSpec(site="s", kind="runtime_error", times=2,
+                                after=1)
+        with faults.inject_faults(spec):
+            faults.maybe_raise("s")           # after=1: skipped
+            for _ in range(2):                # times=2: fires twice
+                with pytest.raises(faults.InjectedFault):
+                    faults.maybe_raise("s")
+            faults.maybe_raise("s")           # budget spent
+        faults.maybe_raise("s")               # out of scope: inert
+
+    def test_probabilistic_firing_is_seed_deterministic(self):
+        def run(seed):
+            fired = []
+            spec = faults.FaultSpec(site="s", kind="runtime_error",
+                                    times=None, p=0.5)
+            with faults.inject_faults(spec, seed=seed):
+                for _ in range(20):
+                    try:
+                        faults.maybe_raise("s")
+                        fired.append(False)
+                    except faults.InjectedFault:
+                        fired.append(True)
+            return fired
+
+        assert run(7) == run(7)
+        assert any(run(7)) and not all(run(7))
+
+    def test_backend_qualifier_scopes_the_fault(self):
+        with faults.inject_faults("s@interpret:runtime_error:times=none"):
+            faults.maybe_raise("s", "xla")    # other backend: inert
+            with pytest.raises(faults.InjectedFault):
+                faults.maybe_raise("s", "interpret")
+
+    def test_latency_kind_sleeps(self):
+        with faults.inject_faults("s:latency:latency_s=0.05"):
+            t0 = time.perf_counter()
+            faults.maybe_raise("s")
+            assert time.perf_counter() - t0 >= 0.04
+
+    def test_corrupt_poisons_float_leaves_only(self):
+        value = {"x": jnp.ones((3,)), "i": jnp.arange(3)}
+        with faults.inject_faults("s:nan"):
+            out = faults.corrupt("s", None, value)
+        assert bool(jnp.isnan(out["x"]).all())
+        np.testing.assert_array_equal(np.asarray(out["i"]), [0, 1, 2])
+
+    def test_env_schedule_reinstall(self, monkeypatch):
+        monkeypatch.setenv("REPRO_FAULTS", "envsite:runtime_error:times=1")
+        faults.reinstall_env_faults()
+        with pytest.raises(faults.InjectedFault):
+            faults.maybe_raise("envsite")
+        faults.maybe_raise("envsite")  # times=1 consumed
+        monkeypatch.delenv("REPRO_FAULTS")
+        faults.reinstall_env_faults()
+        faults.maybe_raise("envsite")
+
+    def test_compile_error_gated_on_compile_scope(self):
+        with faults.inject_faults("s:compile_error:times=none"):
+            faults.maybe_raise("s")  # not compiling: inert
+            with faults.compile_scope():
+                with pytest.raises(faults.InjectedFault):
+                    faults.maybe_raise("s")
+
+
+# ---------------------------------------------------------------------------
+# Quarantine
+# ---------------------------------------------------------------------------
+class TestQuarantine:
+    def test_add_block_reset(self):
+        shapes, dtypes = ((4, 8), (8, 2)), ("float32", "float32")
+        assert quarantine.blocked_reason("op", shapes, dtypes, "be") is None
+        quarantine.add("op", shapes, dtypes, "be", reason="boom")
+        msg = quarantine.blocked_reason("op", shapes, dtypes, "be")
+        assert msg is not None and msg.startswith("quarantine:")
+        assert "boom" in msg and "'be'" in msg
+        # different signature / backend: not blocked
+        assert quarantine.blocked_reason("op", shapes, dtypes, "other") \
+            is None
+        assert quarantine.blocked_reason(
+            "op", ((2, 8), (8, 2)), dtypes, "be") is None
+        [entry] = quarantine.QUARANTINE.entries()
+        assert entry["op"] == "op" and entry["backend"] == "be"
+        assert entry["expires_in_s"] > 0
+        quarantine.reset()
+        assert quarantine.blocked_reason("op", shapes, dtypes, "be") is None
+
+    def test_ttl_expiry(self):
+        shapes, dtypes = ((4, 8),), ("float32",)
+        quarantine.add("op", shapes, dtypes, "be", reason="r", ttl_s=0.05)
+        assert quarantine.blocked_reason("op", shapes, dtypes, "be")
+        time.sleep(0.08)
+        assert quarantine.blocked_reason("op", shapes, dtypes, "be") is None
+        assert len(quarantine.QUARANTINE) == 0
+
+
+# ---------------------------------------------------------------------------
+# Runtime failover (the tentpole acceptance path)
+# ---------------------------------------------------------------------------
+class TestFailover:
+    def test_injected_runtime_fault_fails_over_then_quarantines(self):
+        """The acceptance scenario: a runtime fault on the preferred backend
+        degrades to numerically-identical xla output with no crash; the
+        report says why; the second call skips the quarantined rung with
+        zero retry attempts."""
+        a, b = _ab()
+        ref_out = ops.sma_gemm(a, b, backend="xla")
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            with repro.inject_faults(
+                    "sma_gemm@interpret:runtime_error:times=1"):
+                with repro.options(backend="interpret"):
+                    out = ops.sma_gemm(a, b)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                                   rtol=1e-5, atol=1e-5)
+        assert metrics.get("resilience.runtime_fallback.sma_gemm") == 1
+        section = guard.resilience_section()
+        assert section["enabled"]
+        assert section["runtime_fallbacks"] == 1
+        [event] = [e for e in section["events"]
+                   if e["kind"] == "runtime_fallback"]
+        assert event["op"] == "sma_gemm"
+        assert event["backend"] == "interpret"
+        assert "runtime:" in event["reason"]
+        assert section["injected_faults"].get("runtime_error", 0) >= 1
+
+        # Second call: quarantine steers the ladder, zero retry attempts.
+        attempts_before = metrics.get("resilience.failover_attempts")
+        skips_before = metrics.get("resilience.quarantine_skips")
+        with repro.options(backend="interpret"):
+            out2 = ops.sma_gemm(a, b)
+        np.testing.assert_allclose(np.asarray(out2), np.asarray(ref_out),
+                                   rtol=1e-5, atol=1e-5)
+        assert metrics.get("resilience.failover_attempts") == attempts_before
+        assert metrics.get("resilience.quarantine_skips") > skips_before
+
+    def test_failure_on_terminal_xla_rung_propagates(self):
+        a, b = _ab()
+        with repro.inject_faults("sma_gemm@xla:runtime_error:times=1"):
+            with pytest.raises(faults.InjectedFault):
+                ops.sma_gemm(a, b, backend="xla")
+
+    def test_non_runtime_errors_propagate(self):
+        a, b = _ab()
+
+        def bad_gemm(a, b, **kw):
+            raise TypeError("programming error, not a runtime failure")
+
+        register_backend(Backend("bad-test", ExecMode.SYSTOLIC,
+                                 ops={"sma_gemm": bad_gemm}))
+        try:
+            with pytest.raises(TypeError, match="programming error"):
+                ops.sma_gemm(a, b, backend=("bad-test", "xla"))
+        finally:
+            unregister_backend("bad-test")
+
+    def test_custom_backend_not_implemented_fails_over(self):
+        """A registrant raising NotImplementedError at run time (statically
+        it claimed the site) degrades to xla like any runtime failure."""
+        a, b = _ab()
+        ref_out = ops.sma_gemm(a, b, backend="xla")
+
+        def flaky_gemm(a, b, **kw):
+            raise NotImplementedError("kernel missing for this shape")
+
+        register_backend(Backend("flaky-test", ExecMode.SYSTOLIC,
+                                 ops={"sma_gemm": flaky_gemm}))
+        try:
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", RuntimeWarning)
+                out = ops.sma_gemm(a, b, backend=("flaky-test", "xla"))
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                                       rtol=1e-5, atol=1e-5)
+            assert len(quarantine.QUARANTINE) == 1
+        finally:
+            unregister_backend("flaky-test")
+
+    def test_reset_lifts_quarantine(self):
+        a, b = _ab()
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            with repro.inject_faults(
+                    "sma_gemm@interpret:runtime_error:times=1"):
+                ops.sma_gemm(a, b, backend="interpret")
+        assert len(quarantine.QUARANTINE) == 1
+        res.reset()
+        assert len(quarantine.QUARANTINE) == 0
+        # backend is healthy again and serves the site directly
+        before = metrics.get("resilience.quarantine_skips")
+        ops.sma_gemm(a, b, backend="interpret")
+        assert metrics.get("resilience.quarantine_skips") == before
+
+    def test_is_runtime_failure_classification(self):
+        assert guard.is_runtime_failure(
+            faults.InjectedFault("s", None, "runtime_error"))
+        assert guard.is_runtime_failure(NotImplementedError("x"))
+        assert guard.is_runtime_failure(
+            RuntimeError("RESOURCE_EXHAUSTED: out of memory"))
+        assert guard.is_runtime_failure(MemoryError())
+        assert not guard.is_runtime_failure(RuntimeError("plain failure"))
+        assert not guard.is_runtime_failure(TypeError("x"))
+        assert not guard.is_runtime_failure(ValueError("x"))
+
+    def test_report_render_includes_resilience_line(self):
+        a, b = _ab()
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            with repro.inject_faults(
+                    "sma_gemm@interpret:runtime_error:times=1"):
+                with repro.options(backend="interpret"):
+                    ops.sma_gemm(a, b)
+        engine = repro.sma_jit(lambda x, w: x @ w, name="res_report")
+        compiled = engine.compile(a, b)
+        text = render_text(compiled.report)
+        assert "resilience" in text
+        assert "1 runtime fallbacks" in text
+        assert "injected faults" in text
+
+
+# ---------------------------------------------------------------------------
+# Numeric guards
+# ---------------------------------------------------------------------------
+class TestNumericGuards:
+    def test_fallback_recomputes_on_reference_path(self):
+        a, b = _ab()
+        ref_out = ops.sma_gemm(a, b, backend="xla")
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            with repro.inject_faults("sma_gemm@interpret:nan:times=1"):
+                out = ops.sma_gemm(a, b, backend="interpret",
+                                   check_numerics="fallback")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                                   rtol=1e-5, atol=1e-5)
+        assert metrics.get("resilience.numeric_fallback.sma_gemm") == 1
+        section = guard.resilience_section()
+        assert section["numeric_events"] == 1
+        assert section["numeric_fallbacks"] == 1
+
+    def test_raise_policy(self):
+        a, b = _ab()
+        with repro.inject_faults("sma_gemm@interpret:inf:times=1"):
+            with pytest.raises(FloatingPointError, match="non-finite"):
+                ops.sma_gemm(a, b, backend="interpret",
+                             check_numerics="raise")
+
+    def test_log_policy_warns_and_keeps_value(self):
+        a, b = _ab()
+        with repro.inject_faults("sma_gemm@interpret:nan:times=1"):
+            with pytest.warns(RuntimeWarning, match="non-finite"):
+                out = ops.sma_gemm(a, b, backend="interpret",
+                                   check_numerics="log")
+        assert bool(jnp.isnan(out).all())
+
+    def test_off_policy_is_silent(self):
+        a, b = _ab()
+        with repro.inject_faults("sma_gemm@interpret:nan:times=1"):
+            out = ops.sma_gemm(a, b, backend="interpret")
+        assert bool(jnp.isnan(out).all())
+        assert guard.resilience_section()["numeric_events"] == 0
+
+    def test_options_validate_policy_name(self):
+        with pytest.raises(ValueError, match="check_numerics"):
+            repro.SMAOptions(check_numerics="sometimes")
+
+    def test_engine_boundary_guard_under_jit(self):
+        """Under jit=True kernel-site checks see tracers and skip; the
+        engine boundary checks the concrete outputs and recomputes the
+        whole call on the reference path."""
+        a, b = _ab()
+        ref_out = np.asarray(a @ b)
+        engine = repro.sma_jit(
+            lambda x, w: ops.sma_gemm(x, w),
+            options=repro.SMAOptions(jit=True, backend="interpret",
+                                     check_numerics="fallback"),
+            name="guarded")
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            # times=none: the corruption is baked into the traced graph
+            with repro.inject_faults("sma_gemm@interpret:nan:times=none"):
+                out = engine(a, b)
+        np.testing.assert_allclose(np.asarray(out), ref_out,
+                                   rtol=1e-4, atol=1e-4)
+        assert metrics.get("resilience.numeric_fallback.engine.guarded") == 1
+
+
+# ---------------------------------------------------------------------------
+# Engine LRU cache bound
+# ---------------------------------------------------------------------------
+class TestEngineCacheBound:
+    def test_lru_eviction_and_recompile(self):
+        w = jnp.asarray(np.random.RandomState(2).randn(32, 8)
+                        .astype(np.float32))
+        engine = repro.sma_jit(
+            lambda x, w: x @ w,
+            options=repro.SMAOptions(max_cache_entries=2), name="lru")
+        evictions_before = metrics.get("engine.cache_evictions")
+        for bs in (4, 8, 16):
+            engine(jnp.ones((bs, 32), jnp.float32), w)
+        assert engine.cache_size == 2
+        assert engine.stats.evictions == 1
+        assert engine.stats.asdict()["evictions"] == 1
+        assert metrics.get("engine.cache_evictions") == evictions_before + 1
+        # bs=4 was least recently used -> evicted -> recompiles
+        misses = engine.stats.misses
+        engine(jnp.ones((4, 32), jnp.float32), w)
+        assert engine.stats.misses == misses + 1
+        # bs=16 stayed resident -> pure hit
+        hits = engine.stats.hits
+        engine(jnp.ones((16, 32), jnp.float32), w)
+        assert engine.stats.hits == hits + 1
+        assert engine.stats.misses == misses + 1
+
+    def test_hit_refreshes_lru_order(self):
+        w = jnp.asarray(np.random.RandomState(2).randn(32, 8)
+                        .astype(np.float32))
+        engine = repro.sma_jit(
+            lambda x, w: x @ w,
+            options=repro.SMAOptions(max_cache_entries=2), name="lru2")
+        engine(jnp.ones((4, 32), jnp.float32), w)
+        engine(jnp.ones((8, 32), jnp.float32), w)
+        engine(jnp.ones((4, 32), jnp.float32), w)   # refresh bs=4
+        engine(jnp.ones((16, 32), jnp.float32), w)  # evicts bs=8
+        misses = engine.stats.misses
+        engine(jnp.ones((4, 32), jnp.float32), w)
+        assert engine.stats.misses == misses, "refreshed entry was evicted"
+
+    def test_unbounded_by_default(self):
+        w = jnp.asarray(np.random.RandomState(2).randn(32, 8)
+                        .astype(np.float32))
+        engine = repro.sma_jit(lambda x, w: x @ w, name="unbounded")
+        for bs in (2, 4, 8):
+            engine(jnp.ones((bs, 32), jnp.float32), w)
+        assert engine.cache_size == 3
+        assert engine.stats.evictions == 0
+
+    def test_compile_fault_fires_only_in_compile_scope(self):
+        w = jnp.asarray(np.random.RandomState(2).randn(32, 8)
+                        .astype(np.float32))
+        engine = repro.sma_jit(lambda x, w: x @ w, name="cfault")
+        with repro.inject_faults("engine.compile:compile_error:times=1"):
+            with pytest.raises(faults.InjectedFault):
+                engine(jnp.ones((4, 32), jnp.float32), w)
+        # the failed compile cached nothing; a clean retry works
+        out = engine(jnp.ones((4, 32), jnp.float32), w)
+        assert out.shape == (4, 8)
+
+
+# ---------------------------------------------------------------------------
+# Failure-isolated serving
+# ---------------------------------------------------------------------------
+def _server(**kw):
+    cfg = C.reduced(C.get_config("stablelm-1.6b"))
+    params, _ = lm.init(KEY, cfg)
+    kw.setdefault("slots", 2)
+    kw.setdefault("cache_size", 64)
+    return Server(cfg, params, **kw), cfg
+
+
+class TestServeChaos:
+    def test_poisoned_request_evicted_others_complete(self):
+        """The serving acceptance scenario: one slot's state goes NaN; that
+        request is retried then evicted while the other slot finishes with
+        its full token budget."""
+        server, cfg = _server(retry=RetryPolicy(max_retries=1))
+        r0 = Request(rid=0, prompt=np.array([1, 2, 3], np.int32),
+                     max_new_tokens=4)
+        r1 = Request(rid=1, prompt=np.array([4, 5, 6], np.int32),
+                     max_new_tokens=4)
+        assert server.admit(r0) and server.admit(r1)
+        server.tick()
+        # poison r1's slot state (axis 1 is the slot axis)
+        bad = r1.slot
+        server.state = jax.tree.map(
+            lambda s: s.at[:, bad].set(jnp.nan)
+            if (s.ndim >= 2 and jnp.issubdtype(s.dtype, jnp.inexact))
+            else s, server.state)
+        evictions_before = metrics.get("serve.evictions")
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            for _ in range(12):
+                if not server.active:
+                    break
+                server.tick()
+        assert r0.status == "done"
+        assert len(r0.out_tokens) == 4
+        assert all(0 <= t < lm.padded_vocab(cfg) for t in r0.out_tokens)
+        assert r1.status == "failed"
+        assert "non-finite" in r1.error
+        assert r1.retries == 2  # one retry granted, second strike evicts
+        assert metrics.get("serve.evictions") == evictions_before + 1
+        assert server.failed == {1: r1} and 0 in server.done
+        # the freed slot serves a fresh request cleanly
+        r2 = Request(rid=2, prompt=np.array([7, 8], np.int32),
+                     max_new_tokens=3)
+        assert server.admit(r2)
+        while server.active:
+            server.tick()
+        assert r2.status == "done" and len(r2.out_tokens) == 3
+
+    def test_tick_runtime_fault_retries_whole_batch(self):
+        server, _ = _server(retry=RetryPolicy(max_retries=2))
+        req = Request(rid=0, prompt=np.array([1, 2], np.int32),
+                      max_new_tokens=3)
+        assert server.admit(req)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            with repro.inject_faults("serve.tick:runtime_error:times=1"):
+                out = server.tick()     # injected failure: no tokens
+                assert out == {}
+                assert req.retries == 1
+                while server.active:
+                    server.tick()
+        assert req.status == "done" and len(req.out_tokens) == 3
+        assert metrics.get("serve.tick_failures") == 1
+
+    def test_watchdog_counts_deadline_overrun(self):
+        server, _ = _server(
+            retry=RetryPolicy(deadline_s=0.01))
+        req = Request(rid=0, prompt=np.array([1, 2], np.int32),
+                      max_new_tokens=1)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            assert server.admit(req)
+            with repro.inject_faults(
+                    "serve.tick:latency:times=1,latency_s=0.05"):
+                server.tick()
+        assert metrics.get("serve.watchdog_exceeded") >= 1

@@ -249,3 +249,91 @@ class TestServing:
                 server.tick()
             outs.append(tuple(req.out_tokens))
         assert outs[0] == outs[1]
+
+
+class TestServingEdgeCases:
+    @pytest.fixture(scope="class")
+    def served(self):
+        cfg = C.reduced(C.get_config("stablelm-1.6b"))
+        params, _ = lm.init(KEY, cfg)
+        return cfg, params
+
+    def test_empty_prompt_rejected_not_crashed(self, served):
+        cfg, params = served
+        server = Server(cfg, params, slots=1, cache_size=64)
+        req = Request(rid=0, prompt=np.zeros((0,), np.int32),
+                      max_new_tokens=4)
+        assert server.admit(req) is True  # consumed, not admitted
+        assert req.status == "failed"
+        assert "empty prompt" in req.error
+        assert not server.active and 0 in server.failed
+
+    def test_kv_cache_overflow_rejected_at_admit(self, served):
+        """The old behavior silently wrapped/stopped attending past the
+        cache bound; now the request is rejected at the door with the
+        budget spelled out."""
+        cfg, params = served
+        server = Server(cfg, params, slots=1, cache_size=16)
+        req = Request(rid=0, prompt=np.arange(12, dtype=np.int32),
+                      max_new_tokens=8)  # 12 + 8 > 16
+        assert server.admit(req) is True
+        assert req.status == "failed"
+        assert "cache_size is 16" in req.error
+        assert "20 KV-cache positions" in req.error
+        # an in-budget request on the same server still decodes fine
+        ok = Request(rid=1, prompt=np.array([1, 2, 3], np.int32),
+                     max_new_tokens=4)
+        assert server.admit(ok)
+        while server.active:
+            server.tick()
+        assert ok.status == "done" and len(ok.out_tokens) == 4
+
+    def test_zero_max_new_tokens_trivially_done(self, served):
+        cfg, params = served
+        server = Server(cfg, params, slots=1, cache_size=64)
+        req = Request(rid=0, prompt=np.array([1, 2], np.int32),
+                      max_new_tokens=0)
+        assert server.admit(req) is True
+        assert req.status == "done"
+        assert req.out_tokens == []
+        assert not server.active and 0 in server.done
+
+    def test_admission_waits_for_freed_slot(self, served):
+        cfg, params = served
+        server = Server(cfg, params, slots=1, cache_size=64)
+        first = Request(rid=0, prompt=np.array([1, 2], np.int32),
+                        max_new_tokens=2)
+        second = Request(rid=1, prompt=np.array([3, 4], np.int32),
+                         max_new_tokens=2)
+        assert server.admit(first)
+        assert server.admit(second) is False  # slot busy: NOT consumed
+        while server.active:
+            server.tick()
+        assert first.status == "done"
+        assert server.admit(second) is True   # freed slot admits it
+        while server.active:
+            server.tick()
+        assert second.status == "done" and len(second.out_tokens) == 2
+
+    def test_temperature_sampling_deterministic_under_seed(self, served):
+        cfg, params = served
+        outs = []
+        for _ in range(2):
+            server = Server(cfg, params, slots=1, cache_size=64,
+                            temperature=0.7, seed=123)
+            req = Request(rid=0, prompt=np.array([1, 2, 3], np.int32),
+                          max_new_tokens=5)
+            server.admit(req)
+            while server.active:
+                server.tick()
+            outs.append(tuple(req.out_tokens))
+        assert outs[0] == outs[1]
+        # a different seed draws a different trajectory (overwhelmingly)
+        server = Server(cfg, params, slots=1, cache_size=64,
+                        temperature=0.7, seed=7)
+        req = Request(rid=0, prompt=np.array([1, 2, 3], np.int32),
+                      max_new_tokens=5)
+        server.admit(req)
+        while server.active:
+            server.tick()
+        assert all(0 <= t < lm.padded_vocab(cfg) for t in req.out_tokens)
