@@ -5,6 +5,12 @@ Traces every config in ``repro.configs`` through the full compiler pipeline
 placeholders — no parameter memory is allocated, so the 132B-class configs
 report in seconds on a laptop.  Emits one JSON report per family
 (``benchmarks/run.py --compile-report [--report-dir DIR]``).
+
+The compile itself lives in :mod:`repro.launch.families` — the same harness
+the static analyzer (``python -m repro.analysis``) drives, so the benchmark
+reports and the analysis golden baseline can never drift on placeholder
+shapes or input-mode handling.  This front-end keeps its long-standing
+``backend="xla"`` pin (pure SIMD-substrate dry-run numbers).
 """
 from __future__ import annotations
 
@@ -12,49 +18,17 @@ import json
 import os
 from typing import Any, Dict, Optional
 
-import jax
-import jax.numpy as jnp
-
 
 def family_report(arch: str, *, seq_len: int = 512, batch: int = 1,
                   reduced: bool = False) -> Dict[str, Any]:
     """Compile one architecture and return its plan report."""
     import repro
-    import repro.configs as C
-    from repro.models import lm
-    from repro.models.layers import Runtime
+    from repro.launch.families import compile_family
 
-    cfg = C.get_config(arch)
-    if reduced:
-        cfg = C.reduced(cfg)
-    rt = Runtime(remat=False)
-
-    s = max(seq_len, cfg.num_vision_tokens + 64)
-    if cfg.input_mode == "tokens":
-        batch_shapes = {"tokens": jax.ShapeDtypeStruct((batch, s),
-                                                       jnp.int32)}
-    elif cfg.input_mode == "embeds":
-        batch_shapes = {"embeds": jax.ShapeDtypeStruct(
-            (batch, s, cfg.d_model), jnp.float32)}
-    else:
-        nv = cfg.num_vision_tokens
-        batch_shapes = {
-            "tokens": jax.ShapeDtypeStruct((batch, s - nv), jnp.int32),
-            "vision_embeds": jax.ShapeDtypeStruct((batch, nv, cfg.d_model),
-                                                  jnp.float32),
-        }
-
-    p_shapes = jax.eval_shape(lambda k: lm.init(k, cfg)[0],
-                              jax.random.PRNGKey(0))
-    engine = repro.sma_jit(lambda p, b: lm.forward(p, cfg, rt, b),
-                           options=repro.SMAOptions(backend="xla"),
-                           name=cfg.name)
-    compiled = engine.compile(p_shapes, batch_shapes)
-    report = compiled.report
-    report["family"] = cfg.family
-    report["traced_shape"] = {"batch": batch, "seq_len": s}
-    report["params"] = cfg.param_count()
-    return report
+    compiled = compile_family(arch, seq_len=seq_len, batch=batch,
+                              reduced=reduced,
+                              options=repro.SMAOptions(backend="xla"))
+    return compiled.report
 
 
 def run(report_dir: Optional[str] = None, *, seq_len: int = 512,

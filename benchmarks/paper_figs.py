@@ -6,7 +6,7 @@ is the paper's headline metric for that figure, plus a claims list of
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import List, Tuple
 
 import numpy as np
 

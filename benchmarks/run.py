@@ -163,6 +163,14 @@ def main() -> None:
                          "XLA_FLAGS=--xla_force_host_platform_device_count"
                          "=4) and write them as JSON (default path: "
                          "BENCH_gemm_sharded.json at the repo root)")
+    ap.add_argument("--analyze", nargs="*", default=None, metavar="ARCH",
+                    help="run the static plan verifier + SMA lint pass "
+                         "(python -m repro.analysis) over the named "
+                         "architectures (none = --all) instead of "
+                         "benchmarks; exits nonzero on error diagnostics")
+    ap.add_argument("--analyze-check", action="store_true",
+                    help="with --analyze: gate against the committed "
+                         "golden baseline (GOLDEN_diagnostics.json)")
     ap.add_argument("--compile-report", action="store_true",
                     help="emit one jaxpr->SMA plan report (JSON) per model "
                          "family instead of running benchmarks")
@@ -200,6 +208,16 @@ def _dispatch(args) -> None:
         write_bench_json(args.bench_json, full=args.bench_full,
                          check=args.bench_check)
         return
+
+    if args.analyze is not None:
+        from repro.analysis.cli import main as analysis_main
+        argv = list(args.analyze) or ["--all"]
+        argv += ["--seq", str(args.report_seq)]
+        if args.report_reduced:
+            argv.append("--reduced")
+        if args.analyze_check:
+            argv.append("--check")
+        raise SystemExit(analysis_main(argv))
 
     if args.compile_report:
         from benchmarks import compile_report

@@ -19,7 +19,7 @@ import numpy as np
 
 import repro
 import repro.configs as C
-from repro.data.pipeline import DataConfig, make_batch, _bigram_params
+from repro.data.pipeline import _bigram_params
 from repro.launch.serve import Request, Server
 from repro.launch.train import TrainLoopConfig, train
 

@@ -42,7 +42,7 @@ _OBS_EXPORTS = {"profile"}
 #: of the subsystem lives under ``repro.resilience``.
 _RESILIENCE_EXPORTS = {"inject_faults", "FaultSpec"}
 
-_SUBPACKAGES = ("compiler", "backends", "obs", "resilience")
+_SUBPACKAGES = ("analysis", "compiler", "backends", "obs", "resilience")
 
 __all__ = sorted(_API_EXPORTS | _OBS_EXPORTS | _RESILIENCE_EXPORTS) \
     + list(_SUBPACKAGES)

@@ -1,0 +1,61 @@
+"""repro.analysis — static verification and linting of compiled SMA plans.
+
+Three layers over one :class:`repro.compiler.dispatch.CompiledModel`:
+
+* :mod:`repro.analysis.verify` — structural invariants that must NEVER fail
+  on a correct compile (dataflow shape/dtype agreement, legal execution
+  modes, fused-site liveness, exact cost-ledger reconciliation, scan
+  multipliers, predicted-vs-realized backend fallbacks).  Violations are
+  ``error`` severity; ``SMAOptions(verify="error")`` turns them into a
+  raised :class:`~repro.analysis.verify.PlanVerificationError` at compile
+  time.
+* :mod:`repro.analysis.lints` — advisory SMA-efficiency diagnostics with
+  stable codes (SMA001..SMA006): mode ping-pong, missed fusion, predicted
+  runtime fallbacks, MXU misalignment, dtype-downcast hazards, dead ops.
+* the CLI — ``python -m repro.analysis <config ...|--all>`` compiles the
+  assigned model families through the shared harness
+  (:mod:`repro.launch.families`), prints per-family diagnostics, and exits
+  nonzero on any ``error``; ``--check`` additionally gates against the
+  committed golden baseline (``GOLDEN_diagnostics.json``).
+
+Every compile stamps a ``diagnostics`` section into its plan report via
+:func:`attach_diagnostics` (called by ``compiler.dispatch``), so reports
+always carry the analysis verdict regardless of the ``verify`` policy.
+"""
+
+from __future__ import annotations
+
+from typing import Any, List
+
+from repro.analysis.diagnostics import (
+    CODES,
+    Diagnostic,
+    diagnostics_section,
+)
+from repro.analysis.lints import lint_compiled, predicted_fallbacks
+from repro.analysis.verify import PlanVerificationError, verify_compiled
+
+__all__ = [
+    "CODES",
+    "Diagnostic",
+    "PlanVerificationError",
+    "analyze_compiled",
+    "attach_diagnostics",
+    "diagnostics_section",
+    "lint_compiled",
+    "predicted_fallbacks",
+    "verify_compiled",
+]
+
+
+def analyze_compiled(compiled: Any) -> List[Diagnostic]:
+    """Full analysis pass: verifier invariants first, then the lint set."""
+    return verify_compiled(compiled) + lint_compiled(compiled)
+
+
+def attach_diagnostics(compiled: Any) -> List[Diagnostic]:
+    """Run :func:`analyze_compiled` and stamp the ``diagnostics`` report
+    section.  Returns the diagnostics for the caller's policy enforcement."""
+    diags = analyze_compiled(compiled)
+    compiled.report_data["diagnostics"] = diagnostics_section(diags)
+    return diags

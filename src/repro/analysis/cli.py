@@ -1,0 +1,174 @@
+"""``python -m repro.analysis`` — static analysis over the config families.
+
+Compiles each named architecture (or ``--all``) through the shared harness
+(:mod:`repro.launch.families`) with ``backend="auto"`` — the capability-
+checked pallas→xla ladder, pinned explicitly so an ambient ``REPRO_BACKEND``
+cannot skew results — and prints each family's diagnostics.
+
+Exit codes: ``0`` clean, ``1`` any ``error``-severity diagnostic (verifier
+invariant violations), ``2`` drift against the committed golden baseline
+(``--check``).
+
+The golden baseline (``GOLDEN_diagnostics.json`` at the repo root, refreshed
+with ``--update-golden``) pins per-family error counts at zero and lint
+counts per code; ``--check`` fails on any new code or a count *increase*
+(decreases pass — fixing lints never breaks CI, it just means the golden
+should be refreshed).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from typing import Any, Dict, List, Optional
+
+GOLDEN_PATH = pathlib.Path(__file__).resolve().parents[3] \
+    / "GOLDEN_diagnostics.json"
+
+
+def _analyze_family(arch: str, *, seq_len: int, batch: int,
+                    reduced: bool) -> Dict[str, Any]:
+    import repro
+    from repro.launch.families import compile_family
+
+    compiled = compile_family(
+        arch, seq_len=seq_len, batch=batch, reduced=reduced,
+        options=repro.SMAOptions(backend="auto"))
+    return compiled.report_data["diagnostics"]
+
+
+def _render_family(arch: str, section: Dict[str, Any],
+                   verbose: bool) -> str:
+    codes = ", ".join(f"{c} x{n}"
+                      for c, n in sorted(section["by_code"].items()))
+    lines = [f"{arch}: {section['errors']} errors, "
+             f"{section['warnings']} warnings, {section['infos']} infos"
+             + (f"  [{codes}]" if codes else "")]
+    if verbose:
+        for item in section["items"]:
+            lines.append(f"  {item['code']} [{item['severity']}] "
+                         f"{item['message']}")
+    return "\n".join(lines)
+
+
+def _golden_entry(section: Dict[str, Any]) -> Dict[str, Any]:
+    return {"errors": section["errors"],
+            "by_code": dict(sorted(section["by_code"].items()))}
+
+
+def _check_against_golden(results: Dict[str, Dict[str, Any]],
+                          golden: Dict[str, Any]) -> List[str]:
+    """Drift report vs the golden baseline; empty means the gate passes."""
+    problems: List[str] = []
+    families = golden.get("families", {})
+    for arch, section in results.items():
+        base = families.get(arch)
+        if base is None:
+            problems.append(f"{arch}: not in the golden baseline "
+                            f"(run --update-golden)")
+            continue
+        if section["errors"] > base.get("errors", 0):
+            problems.append(
+                f"{arch}: {section['errors']} error diagnostics "
+                f"(golden {base.get('errors', 0)})")
+        for code, count in section["by_code"].items():
+            allowed = base.get("by_code", {}).get(code)
+            if allowed is None:
+                problems.append(f"{arch}: new diagnostic code {code} "
+                                f"(x{count}) not in golden")
+            elif count > allowed:
+                problems.append(f"{arch}: {code} count {count} > "
+                                f"golden {allowed}")
+    return problems
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import repro.configs as C
+
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static plan verifier + SMA lint pass over the "
+                    "assigned model families.")
+    parser.add_argument("archs", nargs="*", metavar="ARCH",
+                        help=f"architectures to analyze "
+                             f"(choices: {', '.join(C.ARCH_IDS)})")
+    parser.add_argument("--all", action="store_true",
+                        help="analyze every registered architecture")
+    parser.add_argument("--check", action="store_true",
+                        help="gate against the committed golden baseline")
+    parser.add_argument("--update-golden", action="store_true",
+                        help=f"rewrite {GOLDEN_PATH.name} from this run")
+    parser.add_argument("--golden", type=pathlib.Path, default=GOLDEN_PATH,
+                        help="golden baseline path (default: repo root)")
+    parser.add_argument("--json", type=pathlib.Path, default=None,
+                        help="write full per-family diagnostics JSON here")
+    parser.add_argument("--seq", type=int, default=512,
+                        help="sequence length for the traced signature")
+    parser.add_argument("--batch", type=int, default=1)
+    parser.add_argument("--reduced", action="store_true",
+                        help="compile the reduced config variants (faster)")
+    parser.add_argument("-v", "--verbose", action="store_true",
+                        help="print every diagnostic item")
+    args = parser.parse_args(argv)
+
+    archs = list(C.ARCH_IDS) if args.all else args.archs
+    if not archs:
+        parser.error("name at least one architecture or pass --all")
+    unknown = [a for a in archs if a not in C.ARCH_IDS]
+    if unknown:
+        parser.error(f"unknown architecture(s) {unknown} "
+                     f"(choices: {', '.join(C.ARCH_IDS)})")
+
+    results: Dict[str, Dict[str, Any]] = {}
+    for arch in archs:
+        section = _analyze_family(arch, seq_len=args.seq, batch=args.batch,
+                                  reduced=args.reduced)
+        results[arch] = section
+        print(_render_family(arch, section, args.verbose))
+
+    meta = {"seq": args.seq, "batch": args.batch,
+            "reduced": bool(args.reduced), "backend": "auto",
+            "platform": __import__("jax").default_backend()}
+
+    if args.json is not None:
+        args.json.parent.mkdir(parents=True, exist_ok=True)
+        args.json.write_text(json.dumps(
+            {"meta": meta, "families": results}, indent=2, sort_keys=True)
+            + "\n")
+        print(f"wrote {args.json}")
+
+    if args.update_golden:
+        payload = {"meta": meta,
+                   "families": {a: _golden_entry(s)
+                                for a, s in sorted(results.items())}}
+        args.golden.write_text(json.dumps(payload, indent=2,
+                                          sort_keys=True) + "\n")
+        print(f"updated {args.golden}")
+
+    total_errors = sum(s["errors"] for s in results.values())
+    if total_errors:
+        print(f"FAIL: {total_errors} error-severity diagnostic(s)",
+              file=sys.stderr)
+        return 1
+
+    if args.check:
+        if not args.golden.exists():
+            print(f"FAIL: golden baseline {args.golden} missing "
+                  f"(run --update-golden)", file=sys.stderr)
+            return 2
+        golden = json.loads(args.golden.read_text())
+        problems = _check_against_golden(results, golden)
+        if problems:
+            print("FAIL: diagnostics drifted from the golden baseline:",
+                  file=sys.stderr)
+            for p in problems:
+                print(f"  {p}", file=sys.stderr)
+            return 2
+        print(f"golden check passed ({len(results)} families)")
+    return 0
+
+
+if __name__ == "__main__":  # pragma: no cover - exercised via __main__
+    raise SystemExit(main())

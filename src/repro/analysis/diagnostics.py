@@ -1,0 +1,115 @@
+"""Diagnostic objects + the stable code registry for the SMA analyzer.
+
+Codes are API: tests, the golden CI baseline, and downstream tooling match
+on them, so once shipped a code keeps its meaning forever (retire by leaving
+the entry in place and never emitting it again).
+
+Two families:
+
+* ``SMAV0x`` — verifier invariants.  Always ``error`` severity: a firing
+  means the compile pipeline produced an internally inconsistent artifact
+  (or the report was edited), never a style problem in the user's model.
+* ``SMA00x`` — lints.  Advisory ``warning``/``info`` severity: the plan is
+  correct but leaves SMA efficiency on the table, or carries a numeric
+  hazard worth a look.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+__all__ = [
+    "CODES",
+    "SEVERITIES",
+    "Diagnostic",
+    "diagnostics_section",
+    "make",
+]
+
+#: Severity levels, most severe first (index = sort rank).
+SEVERITIES: Tuple[str, ...] = ("error", "warning", "info")
+
+#: ``code -> (default severity, one-line title)``.
+CODES: Dict[str, Tuple[str, str]] = {
+    # -- verifier invariants (structural; always errors) -------------------
+    "SMAV01": ("error", "dataflow violation: use before def or "
+                        "shape/dtype disagreement"),
+    "SMAV02": ("error", "illegal execution-mode assignment in the plan"),
+    "SMAV03": ("error", "fused site references dead or consumed ops"),
+    "SMAV04": ("error", "cost ledger does not reconcile with summary"),
+    "SMAV05": ("error", "scan multiplier inconsistent with carry markers"),
+    "SMAV06": ("error", "statically predicted backend fallback disagrees "
+                        "with runtime-realized record"),
+    # -- lints (advisory) --------------------------------------------------
+    "SMA001": ("warning", "mode ping-pong: tiny SIMD island between "
+                          "systolic groups"),
+    "SMA002": ("warning", "missed fusion: fusable GEMM chain left "
+                          "unrewritten"),
+    "SMA003": ("warning", "predicted runtime backend fallback"),
+    "SMA004": ("info", "MXU/block misalignment: kernel will pad tiles"),
+    "SMA005": ("info", "dtype-downcast hazard feeding a contraction"),
+    "SMA006": ("warning", "dead op: outputs never consumed"),
+}
+
+
+@dataclasses.dataclass
+class Diagnostic:
+    """One analyzer finding, stable-coded for reports and baselines."""
+
+    code: str
+    severity: str
+    message: str
+    site: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        if self.code not in CODES:
+            raise ValueError(f"unknown diagnostic code {self.code!r} "
+                             f"(register it in analysis.diagnostics.CODES)")
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"severity {self.severity!r} not in "
+                             f"{SEVERITIES}")
+
+    @property
+    def title(self) -> str:
+        return CODES[self.code][1]
+
+    def asdict(self) -> Dict[str, Any]:
+        return {"code": self.code, "severity": self.severity,
+                "message": self.message, "site": dict(self.site)}
+
+    def render(self) -> str:
+        return f"{self.code} [{self.severity}] {self.message}"
+
+
+def make(code: str, message: str,
+         site: Optional[Dict[str, Any]] = None,
+         severity: Optional[str] = None) -> Diagnostic:
+    """Build a diagnostic with the code's registered default severity."""
+    return Diagnostic(code=code,
+                      severity=severity or CODES[code][0],
+                      message=message, site=dict(site or {}))
+
+
+def diagnostics_section(diags: List[Diagnostic], *,
+                        max_items: int = 50) -> Dict[str, Any]:
+    """JSON-safe ``diagnostics`` report section.
+
+    Counts are complete; the ``items`` list is capped (most severe first)
+    to keep plan reports readable.
+    """
+    by_code: Dict[str, int] = {}
+    by_severity = {s: 0 for s in SEVERITIES}
+    for d in diags:
+        by_code[d.code] = by_code.get(d.code, 0) + 1
+        by_severity[d.severity] += 1
+    ranked = sorted(diags, key=lambda d: (SEVERITIES.index(d.severity),
+                                          d.code))
+    return {
+        "num": len(diags),
+        "errors": by_severity["error"],
+        "warnings": by_severity["warning"],
+        "infos": by_severity["info"],
+        "by_code": dict(sorted(by_code.items())),
+        "items": [d.asdict() for d in ranked[:max_items]],
+    }

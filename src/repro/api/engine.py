@@ -300,6 +300,11 @@ class Engine:
                 "fused_sites": len(entry.compiled.fused_sites),
                 "mode_switches":
                     entry.compiled.summary.mode_switches,
+                "diagnostics": {
+                    k: entry.compiled.report_data.get(
+                        "diagnostics", {}).get(k, 0)
+                    for k in ("errors", "warnings", "infos")
+                },
             })
         return {"engine": self.name, "cache": self.stats.asdict(),
                 "entries": entries}

@@ -87,6 +87,16 @@ class SMAOptions:
         sites and re-checked at the engine boundary where outputs are
         concrete.
 
+    analysis
+      * ``verify`` — static-analysis policy applied at engine compile time.
+        Every compile runs the :mod:`repro.analysis` pass and stamps a
+        ``diagnostics`` section into the plan report regardless; this knob
+        only decides what *error*-severity verifier findings do:
+        ``"off"`` (default — stamp and continue) | ``"warn"`` (emit a
+        ``UserWarning`` per compile with the error count) | ``"error"``
+        (raise :class:`repro.analysis.PlanVerificationError`, so a broken
+        plan never enters the engine cache).
+
     trace / engine
       * ``max_scan_unroll`` — scans at most this long unroll during lowering.
       * ``jit`` — wrap the dispatched executable in ``jax.jit`` (the serving
@@ -130,6 +140,7 @@ class SMAOptions:
     jit: Optional[bool] = None
     donate_argnums: Optional[Tuple[int, ...]] = None
     check_numerics: Optional[str] = None
+    verify: Optional[str] = None
     max_cache_entries: Optional[int] = None
     block_m: Optional[int] = None
     block_n: Optional[int] = None
@@ -148,11 +159,14 @@ class SMAOptions:
             raise ValueError(
                 f"check_numerics={self.check_numerics!r} (one of "
                 f"'off' | 'log' | 'raise' | 'fallback')")
+        if self.verify not in (None, "off", "warn", "error"):
+            raise ValueError(
+                f"verify={self.verify!r} (one of 'off' | 'warn' | 'error')")
 
     _FIELDS = ("backend", "interpret", "autotune", "precision",
                "fuse_runtime", "fuse_epilogues", "max_epilogue_ops",
                "max_scan_unroll", "jit", "donate_argnums",
-               "check_numerics", "max_cache_entries",
+               "check_numerics", "verify", "max_cache_entries",
                "block_m", "block_n", "block_k", "policy",
                "mesh", "mesh_rules")
 
@@ -223,6 +237,7 @@ DEFAULTS = SMAOptions(
     jit=False,
     donate_argnums=None,
     check_numerics="off",
+    verify="off",
     max_cache_entries=0,
     block_m=None,
     block_n=None,

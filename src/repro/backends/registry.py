@@ -175,6 +175,11 @@ def select_backend(site: OpSite, preference: Preference = None,
             "shapes": [list(s) for s in site.shapes],
             "dtypes": list(site.dtypes),
             "platform": site.platform,
+            # Capability-relevant non-array params (e.g. mLSTM
+            # return_state), JSON-shaped: the static analyzer rebuilds the
+            # OpSite from this record, so the record must carry everything
+            # ``Backend.supports`` consults.
+            "extras": [[k, v] for k, v in site.extras],
             "requested": list(ladder),
             "backend": chosen.name,
             "mode": chosen.mode.value,

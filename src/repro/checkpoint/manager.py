@@ -54,7 +54,10 @@ class CheckpointManager:
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree: Dict[str, Any]) -> None:
         """Snapshot now (host copy), serialize (optionally) in background."""
-        host = jax.tree.map(np.asarray, jax.device_get(tree))
+        # np.array (not asarray): device_get aliases host-resident numpy
+        # leaves, and the snapshot must be immune to caller mutation while
+        # the background thread serializes.
+        host = jax.tree.map(np.array, jax.device_get(tree))
         self.wait()
         if self.async_save:
             self._thread = threading.Thread(

@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 from jax import core
 
+from repro._deprecation import warn_deprecated
 from repro.api.options import SMAOptions, options as options_context, \
     resolve_options
 from repro.backends import base as _backends_base
@@ -388,6 +389,12 @@ class CompiledModel:
     _runner: Callable
     rewritten: Optional[RewriteResult] = None
     options: Optional[SMAOptions] = None
+    #: The FULL backend-resolution record list (trace-time + static dispatch
+    #: walk).  The report's ``backends`` section caps its ``sites`` list for
+    #: readability; the static analyzer (:mod:`repro.analysis`) needs every
+    #: record to reconcile predicted vs realized fallbacks, so the compiler
+    #: stashes the uncapped list here.
+    backend_records: Optional[List[Dict[str, Any]]] = None
     #: Installed by the owning :class:`repro.api.engine.Engine`: re-stamps
     #: the live report sections (``engine`` hit counters, measured
     #: ``runtime`` timeline) on every access, so a report read after N
@@ -520,15 +527,36 @@ def compile_with_options(fn: Callable, *args, name: Optional[str] = None,
         **count_dispatch_sites(traced.jaxpr),
     }
     report["fusion"] = fusion_section(plan, rewritten)
-    report["backends"] = backends_section(
-        traced_sites + collect_backend_sites(traced.jaxpr, rewritten, o), o)
+    backend_records = traced_sites + collect_backend_sites(
+        traced.jaxpr, rewritten, o)
+    report["backends"] = backends_section(backend_records, o)
     report["comm"] = comm_section(
         o.mesh, collect_comm_sites(traced.jaxpr, rewritten),
         plan_comm_bytes=program.total_comm_bytes)
     from repro.resilience import guard as _resilience_guard
     report["resilience"] = _resilience_guard.resilience_section()
-    return CompiledModel(traced=traced, plan=plan, report_data=report,
-                         _runner=runner, rewritten=rewritten, options=o)
+    compiled = CompiledModel(traced=traced, plan=plan, report_data=report,
+                             _runner=runner, rewritten=rewritten, options=o,
+                             backend_records=backend_records)
+    # Every compile runs the static analyzer and stamps the ``diagnostics``
+    # report section (cheap: a few O(eqns) walks over structures already in
+    # hand).  The ``verify`` policy only decides what error-severity
+    # verifier findings do; raising happens *before* the engine caches the
+    # artifact, so a broken plan never serves.
+    from repro.analysis import PlanVerificationError, attach_diagnostics
+    with _obs_trace.span("compile.analyze", cat="compile"):
+        diags = attach_diagnostics(compiled)
+    if (o.verify or "off") != "off":
+        errors = [d for d in diags if d.severity == "error"]
+        if errors:
+            if o.verify == "error":
+                raise PlanVerificationError(errors)
+            warnings.warn(
+                f"plan verification for '{compiled.name}' found "
+                f"{len(errors)} error(s): "
+                + "; ".join(d.render() for d in errors[:3]),
+                stacklevel=2)
+    return compiled
 
 
 #: Sentinel distinguishing "kwarg omitted" (inherit from ambient options)
@@ -550,11 +578,10 @@ def compile_model(fn: Callable, *args, name: Optional[str] = None,
     a one-shot :class:`repro.api.engine.Engine`, compiles the given example
     signature through it, and returns the cached :class:`CompiledModel`.
     """
-    warnings.warn(
+    warn_deprecated(
         "compiler.compile_model is deprecated; use repro.sma_jit(fn, "
         "options=repro.SMAOptions(...)) — the engine caches compiled "
-        "executables per abstract signature instead of re-tracing per call",
-        DeprecationWarning, stacklevel=2)
+        "executables per abstract signature instead of re-tracing per call")
     from repro.api.engine import Engine
     legacy = SMAOptions(
         backend=backend,

@@ -59,6 +59,7 @@ def plan_report(plan: ModelPlan, *, top_groups: int = 5) -> Dict[str, Any]:
         "hbm_bytes_avoided": summary.hbm_bytes_avoided,
         "systolic_flop_share": summary.systolic_flop_share,
         "total_flops": plan.total_flops,
+        "total_bytes": sum(op.bytes_in + op.bytes_out for op in plan.ops),
         "mode_flop_histogram": {m.value: hist[m] for m in ExecMode},
         "opkind_flops": kind_flops,
         "opkind_counts": kind_counts,
@@ -299,6 +300,16 @@ def render_text(report: Dict[str, Any]) -> str:
             f"{rt['switch_overhead_us'] / 1e3:.2f} ms switch overhead")
         lines.extend("    " + ln
                      for ln in render_mode_timeline(rt).splitlines())
+    diag = report.get("diagnostics")
+    if diag:
+        lines.append(
+            f"  static analysis        : {diag['errors']} errors, "
+            f"{diag['warnings']} warnings, {diag['infos']} infos")
+        if diag.get("by_code"):
+            from repro.analysis.diagnostics import CODES
+            for code, count in sorted(diag["by_code"].items()):
+                title = CODES.get(code, (None, "unregistered code"))[1]
+                lines.append(f"    {code} x{count}: {title}")
     res = report.get("resilience")
     if res and res.get("enabled"):
         lines.append(

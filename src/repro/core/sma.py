@@ -25,13 +25,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import warnings
 from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.modes import (FUSABLE_INTO_SYSTOLIC, ExecMode, Op, OpKind)
+from repro._deprecation import warn_deprecated
+from repro.core.modes import (FUSABLE_INTO_SYSTOLIC, ExecMode, Op)
 
 
 @dataclasses.dataclass
@@ -174,11 +174,11 @@ def sma_matmul(a: jax.Array, b: jax.Array, *,
     ``repro.sma_jit``).  Knobs left unset here resolve from that ambient
     configuration; explicit arguments still win, exactly as before.
     """
-    warnings.warn(
+    warn_deprecated(
         "core.sma.sma_matmul is deprecated; call kernels.ops.sma_gemm "
         "(same arguments), or configure via repro.options(...) / "
         "repro.sma_jit(options=...) — SMAOptions is the single "
-        "configuration path", DeprecationWarning, stacklevel=2)
+        "configuration path")
     from repro.kernels import ops as kernel_ops  # defer: optional dep cycle
     return kernel_ops.sma_gemm(a, b, bias=bias, epilogue=epilogue,
                                backend=backend, interpret=interpret,

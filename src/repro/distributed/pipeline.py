@@ -13,7 +13,6 @@ caller's discretion).
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

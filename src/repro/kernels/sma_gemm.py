@@ -156,3 +156,28 @@ def sma_gemm(a: jax.Array, b: jax.Array, *,
 
     out = out[:m_total, :n_dim]
     return out.reshape(*orig_shape[:-1], n_dim)
+
+
+def mxu_alignment(m: int, n: int, k: int, dtype) -> Optional[str]:
+    """Advisory MXU-alignment check for a GEMM site (lint hook, NOT a gate).
+
+    Unlike the attention/recurrence kernels' ``kernel_constraints`` (which
+    gate capability — see :meth:`Backend.supports`), ``sma_gemm`` pads any
+    shape internally, so misalignment never blocks dispatch; it just wastes
+    MXU cycles on padding.  The static analyzer's SMA004 lint consults this
+    to flag shapes whose tiles are not multiples of the MXU/VPU lane grid.
+    Returns ``None`` when aligned, else a human-readable reason.
+    """
+    from repro.kernels.autotune import MXU_TILE, _sublane
+    sub = _sublane(jnp.dtype(dtype))
+    issues = []
+    if m % sub:
+        issues.append(f"M={m} % sublane({sub})")
+    if n % MXU_TILE:
+        issues.append(f"N={n} % {MXU_TILE}")
+    if k % MXU_TILE:
+        issues.append(f"K={k} % {MXU_TILE}")
+    if not issues:
+        return None
+    return ("padded tiles: " + ", ".join(issues)
+            + f" nonzero for dtype {jnp.dtype(dtype).name}")

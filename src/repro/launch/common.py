@@ -7,7 +7,6 @@ launcher decides to materialize them.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -26,9 +26,8 @@ import dataclasses
 import json
 import time
 import traceback
-from typing import Dict, Optional
+from typing import Dict
 
-import jax
 
 from repro.configs.base import (ARCH_IDS, SHAPES, applicable_shapes,
                                 get_config)

@@ -1,0 +1,80 @@
+"""Shared family-compile harness: one engine per assigned model family.
+
+Both the benchmark compile-report (``benchmarks/run.py --compile-report``)
+and the static analyzer (``python -m repro.analysis``) need the same thing:
+trace a ``repro.configs`` architecture through the full compiler pipeline at
+full scale using ``jax.ShapeDtypeStruct`` placeholders — no parameter memory
+is allocated, so even the 132B-class configs compile in seconds on a laptop.
+This module is that one harness, so the two front-ends cannot drift on
+input-mode handling or placeholder shapes.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def family_batch_shapes(cfg, *, seq_len: int = 512, batch: int = 1
+                        ) -> Tuple[int, Dict[str, jax.ShapeDtypeStruct]]:
+    """Placeholder batch for one config, honoring its ``input_mode``.
+
+    Returns ``(effective_seq_len, batch_shapes)`` — the sequence length is
+    raised to fit the config's vision-token prefix when present.
+    """
+    s = max(seq_len, cfg.num_vision_tokens + 64)
+    if cfg.input_mode == "tokens":
+        shapes = {"tokens": jax.ShapeDtypeStruct((batch, s), jnp.int32)}
+    elif cfg.input_mode == "embeds":
+        shapes = {"embeds": jax.ShapeDtypeStruct((batch, s, cfg.d_model),
+                                                 jnp.float32)}
+    else:
+        nv = cfg.num_vision_tokens
+        shapes = {
+            "tokens": jax.ShapeDtypeStruct((batch, s - nv), jnp.int32),
+            "vision_embeds": jax.ShapeDtypeStruct(
+                (batch, nv, cfg.d_model), jnp.float32),
+        }
+    return s, shapes
+
+
+def compile_family(arch: str, *, seq_len: int = 512, batch: int = 1,
+                   reduced: bool = False, options: Any = None,
+                   overlay: Optional[Dict[str, Any]] = None):
+    """Compile one architecture through the SMA pipeline; return the
+    :class:`repro.compiler.dispatch.CompiledModel` (plan + report, nothing
+    executed).
+
+    ``options`` is a full :class:`repro.SMAOptions` (or ``None`` for the
+    ambient defaults); ``overlay`` is a convenience dict of option fields
+    applied on top.  The returned model's report is stamped with the
+    ``family`` / ``traced_shape`` / ``params`` keys the report consumers
+    expect.
+    """
+    import repro
+    import repro.configs as C
+    from repro.models import lm
+    from repro.models.layers import Runtime
+
+    cfg = C.get_config(arch)
+    if reduced:
+        cfg = C.reduced(cfg)
+    rt = Runtime(remat=False)
+
+    opts = options if options is not None else repro.SMAOptions()
+    if overlay:
+        opts = opts.replace(**overlay)
+
+    s, batch_shapes = family_batch_shapes(cfg, seq_len=seq_len, batch=batch)
+    p_shapes = jax.eval_shape(lambda k: lm.init(k, cfg)[0],
+                              jax.random.PRNGKey(0))
+    engine = repro.sma_jit(lambda p, b: lm.forward(p, cfg, rt, b),
+                           options=opts, name=cfg.name)
+    compiled = engine.compile(p_shapes, batch_shapes)
+    report = compiled.report
+    report["family"] = cfg.family
+    report["traced_shape"] = {"batch": batch, "seq_len": s}
+    report["params"] = cfg.param_count()
+    return compiled

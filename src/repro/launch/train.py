@@ -21,7 +21,6 @@ import time
 from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.api import SMAOptions, sma_jit
 from repro.configs.base import ModelConfig, get_config, reduced

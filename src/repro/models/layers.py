@@ -12,12 +12,12 @@ Conventions:
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro._deprecation import warn_deprecated
 from repro.distributed.sharding import shard
 
 _RUNTIME_BACKEND_WARNED = False
@@ -56,13 +56,12 @@ class Runtime:
         if ((self.backend is not None or self.interpret)
                 and not _RUNTIME_BACKEND_WARNED):
             _RUNTIME_BACKEND_WARNED = True
-            warnings.warn(
+            warn_deprecated(
                 "Runtime(backend=..., interpret=...) is deprecated: backend "
                 "selection goes through the repro.backends registry — use "
                 "repro.options(backend=...) / SMAOptions(backend=...) "
                 "instead.  The launch drivers honor these fields for one "
-                "release of back-compat.",
-                DeprecationWarning, stacklevel=3)
+                "release of back-compat.")
 
 
 def compute_cast(w: jax.Array, dtype, *logical_axes: str) -> jax.Array:

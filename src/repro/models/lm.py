@@ -15,8 +15,7 @@ entry points — ``decode_step`` is what the decode-shape dry-run cells lower.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,8 +24,8 @@ from repro.configs.base import ModelConfig
 from repro.distributed.sharding import shard
 from repro.kernels import ops as kops
 from repro.models import attention, moe as moe_lib, recurrent
-from repro.models.layers import (Runtime, compute_cast, cross_entropy,
-                                 embed_init, gated_mlp_apply, gated_mlp_init,
+from repro.models.layers import (Runtime, compute_cast, embed_init,
+                                 gated_mlp_apply, gated_mlp_init,
                                  rmsnorm_apply, rmsnorm_init,
                                  variance_scaling_init)
 

@@ -1,7 +1,6 @@
 """Public API tests: the ``sma_jit`` engine's shape-polymorphic compile
 cache, the ``SMAOptions`` single configuration path, and the deprecated
 back-compat shims (``compile_model``, ``sma_matmul``)."""
-import warnings
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,112 @@
+"""CheckpointManager: save/restore round trips, atomic renames, async
+writes, retention GC, and sharded restore placement."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def _tree(step=0):
+    return {
+        "w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4) + step,
+        "stats": {"count": jnp.asarray(step, jnp.int32),
+                  "scale": jnp.asarray(1.5 + step, jnp.float32)},
+    }
+
+
+def _assert_tree_equal(a, b):
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    assert ta == tb
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestRoundTrip:
+    @pytest.mark.parametrize("async_save", [False, True])
+    def test_save_restore(self, tmp_path, async_save):
+        mgr = CheckpointManager(tmp_path, async_save=async_save)
+        tree = _tree(step=7)
+        mgr.save(7, tree)
+        mgr.wait()
+        step, restored = mgr.restore(_tree())
+        assert step == 7
+        _assert_tree_equal(restored, tree)
+
+    def test_restore_specific_step(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, keep=5, async_save=False)
+        for s in (1, 2, 3):
+            mgr.save(s, _tree(step=s))
+        step, restored = mgr.restore(_tree(), step=2)
+        assert step == 2
+        _assert_tree_equal(restored, _tree(step=2))
+
+    def test_async_save_snapshots_before_mutation(self, tmp_path):
+        """The host copy is taken synchronously: donating/overwriting the
+        tree right after save() must not corrupt the checkpoint."""
+        mgr = CheckpointManager(tmp_path, async_save=True)
+        host = {"w": np.ones((4,), np.float32)}
+        mgr.save(1, host)
+        host["w"][:] = -1.0  # mutate after the call returns
+        mgr.wait()
+        _, restored = mgr.restore({"w": jnp.zeros((4,), jnp.float32)})
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.ones((4,), np.float32))
+
+    def test_restore_with_shardings(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, async_save=False)
+        tree = _tree(step=3)
+        mgr.save(3, tree)
+        dev = jax.devices()[0]
+        sharding = jax.sharding.SingleDeviceSharding(dev)
+        shardings = jax.tree_util.tree_map(lambda _: sharding, _tree())
+        _, restored = mgr.restore(_tree(), shardings=shardings)
+        _assert_tree_equal(restored, tree)
+        assert restored["w"].sharding == sharding
+
+
+class TestDirectoryHygiene:
+    def test_rename_is_atomic_no_tmp_left(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, async_save=True)
+        for s in range(3):
+            mgr.save(s, _tree(step=s))
+        mgr.wait()
+        leftovers = [p for p in os.listdir(tmp_path)
+                     if p.startswith("tmp.")]
+        assert leftovers == []
+        assert sorted(os.listdir(tmp_path)) == \
+            ["step_0", "step_1", "step_2"]
+
+    def test_gc_keeps_last_n(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, keep=2, async_save=False)
+        for s in range(5):
+            mgr.save(s, _tree(step=s))
+        assert mgr.all_steps() == [3, 4]
+        assert mgr.latest_step() == 4
+
+    def test_latest_survives_manager_restart(self, tmp_path):
+        CheckpointManager(tmp_path, async_save=False).save(11, _tree(11))
+        fresh = CheckpointManager(tmp_path, async_save=False)
+        step, restored = fresh.restore(_tree())
+        assert step == 11
+        _assert_tree_equal(restored, _tree(11))
+
+
+class TestErrors:
+    def test_restore_empty_dir_raises(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, async_save=False)
+        with pytest.raises(FileNotFoundError):
+            mgr.restore(_tree())
+
+    def test_restore_missing_leaf_raises_keyerror(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, async_save=False)
+        mgr.save(1, {"w": jnp.ones((2,), jnp.float32)})
+        like = {"w": jnp.zeros((2,), jnp.float32),
+                "extra": jnp.zeros((2,), jnp.float32)}
+        with pytest.raises(KeyError):
+            mgr.restore(like)

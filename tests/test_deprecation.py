@@ -1,0 +1,90 @@
+"""Deprecation shims must attribute their warning to the *caller's* file.
+
+``warn_deprecated`` walks the stack past every frame inside the ``repro``
+package (and the stdlib indirection of ``dataclasses.replace`` etc.), so
+``python -W error::DeprecationWarning`` and log filters point users at
+their own call site, not at our shim internals.  Each test here asserts
+``warning.filename == __file__`` — this file is the caller.
+"""
+
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.models.layers as layers
+from repro.compiler.dispatch import compile_model
+from repro.core.sma import sma_matmul
+from repro.models.layers import Runtime
+
+
+@pytest.fixture(autouse=True)
+def _rearm_runtime_warning():
+    """Runtime's backend warning fires once per process; re-arm per test."""
+    layers._RUNTIME_BACKEND_WARNED = False
+    yield
+    layers._RUNTIME_BACKEND_WARNED = False
+
+
+def _sole_deprecation(caught):
+    msgs = [w for w in caught
+            if issubclass(w.category, DeprecationWarning)]
+    assert len(msgs) == 1, [str(w.message) for w in caught]
+    return msgs[0]
+
+
+class TestWarningAttribution:
+    def test_compile_model_points_at_caller(self):
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            compile_model(lambda x: x * 2.0,
+                          jax.ShapeDtypeStruct((4,), jnp.float32))
+        w = _sole_deprecation(caught)
+        assert w.filename == __file__
+        assert "sma_jit" in str(w.message)
+
+    def test_sma_matmul_points_at_caller(self):
+        a = jnp.ones((8, 8), jnp.float32)
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            out = sma_matmul(a, a, backend="xla")
+        w = _sole_deprecation(caught)
+        assert w.filename == __file__
+        assert "sma_gemm" in str(w.message)
+        assert out.shape == (8, 8)
+
+    def test_runtime_ctor_points_at_caller(self):
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            Runtime(backend="xla")
+        w = _sole_deprecation(caught)
+        assert w.filename == __file__
+
+    def test_dataclasses_replace_skips_stdlib_frame(self):
+        """dataclasses.replace re-enters __post_init__ from dataclasses.py;
+        the stack walk must keep climbing to this file."""
+        rt = Runtime()
+        layers._RUNTIME_BACKEND_WARNED = False
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            dataclasses.replace(rt, backend="xla")
+        w = _sole_deprecation(caught)
+        assert w.filename == __file__
+
+    def test_runtime_warning_fires_once_per_process(self):
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            Runtime(backend="xla")
+            Runtime(backend="xla")
+        msgs = [w for w in caught
+                if issubclass(w.category, DeprecationWarning)]
+        assert len(msgs) == 1
+
+    def test_default_runtime_does_not_warn(self):
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            Runtime()
+        assert [w for w in caught
+                if issubclass(w.category, DeprecationWarning)] == []

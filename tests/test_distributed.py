@@ -12,10 +12,9 @@ import textwrap
 
 import jax
 import pytest
-from jax.sharding import PartitionSpec as P
 
 import repro.configs as C
-from repro.distributed.sharding import MeshRules, rules_for
+from repro.distributed.sharding import rules_for
 
 
 def run_subprocess(code: str, devices: int = 8) -> str:

@@ -18,7 +18,7 @@ from repro.backends.base import Backend
 from repro.backends.registry import register_backend, unregister_backend
 from repro.compiler.report import render_text
 from repro.core.modes import ExecMode
-from repro.kernels import ops, ref
+from repro.kernels import ops
 from repro.launch.serve import Request, Server
 from repro.models import lm
 from repro.obs import metrics
