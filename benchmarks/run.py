@@ -97,12 +97,19 @@ def write_bench_json(path: str, *, full: bool = False,
     process with ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` so
     the 2- and 4-device meshes exist); the ``--bench-check`` gate then
     enforces overlapped <= non-overlapped * slack at every mesh size.
+    ``suite="serve"`` runs the continuous-batching serving rows (Poisson
+    arrivals, sma vs fcfs scheduling); the gate enforces sma switches/token
+    <= fcfs at every rate plus throughput vs the committed baseline.
     """
     import jax
 
     from benchmarks import kernel_bench
 
-    if suite == "sharded":
+    if suite == "serve":
+        from benchmarks import serve_bench
+        rows = serve_bench.serve_rows()
+        suite_name = "serve"
+    elif suite == "sharded":
         if jax.device_count() < 4:
             print(f"# note: only {jax.device_count()} device(s) — set "
                   f"XLA_FLAGS=--xla_force_host_platform_device_count=4 "
@@ -112,8 +119,15 @@ def write_bench_json(path: str, *, full: bool = False,
     else:
         rows = kernel_bench.all_rows() if full else kernel_bench.smoke_rows()
         suite_name = "full" if full else "smoke"
-    baseline_violations = (check_backend_rows(rows, path)
-                           if check and suite == "kernels" else 0)
+    baseline_violations = 0
+    if check and suite == "kernels":
+        baseline_violations = check_backend_rows(rows, path)
+    elif check and suite == "serve":
+        # Serve throughput always gates against the *committed* baseline,
+        # even when the run writes its JSON elsewhere (the CI leg does).
+        from benchmarks import serve_bench
+        baseline_violations = serve_bench.check_serve_baseline(
+            rows, os.path.join(_REPO_ROOT, "BENCH_serve.json"))
     payload = {
         "schema": 1,
         "meta": {
@@ -132,11 +146,18 @@ def write_bench_json(path: str, *, full: bool = False,
     for name, us, derived in rows:
         print(f"{name},{us:.3f},{derived:.4f}")
     print(f"# wrote {len(rows)} rows -> {path}")
-    if check and (check_chain_rows(rows) or baseline_violations):
-        raise SystemExit("bench check failed: fused chain slower than "
-                         "unfused, cached slower than percall, overlapped "
-                         "sharded GEMM slower than non-overlapped, or a "
-                         "backend row regressed vs the committed baseline")
+    if check:
+        if suite == "serve":
+            from benchmarks import serve_bench
+            violations = serve_bench.check_serve_rows(rows)
+        else:
+            violations = check_chain_rows(rows)
+        if violations or baseline_violations:
+            raise SystemExit(
+                "bench check failed: fused chain slower than unfused, "
+                "cached slower than percall, overlapped sharded GEMM "
+                "slower than non-overlapped, SMA scheduler out-switching "
+                "FCFS, or a row regressed vs the committed baseline")
 
 
 def main() -> None:
@@ -163,6 +184,13 @@ def main() -> None:
                          "XLA_FLAGS=--xla_force_host_platform_device_count"
                          "=4) and write them as JSON (default path: "
                          "BENCH_gemm_sharded.json at the repo root)")
+    ap.add_argument("--bench-serve", nargs="?", const=os.path.join(
+                        _REPO_ROOT, "BENCH_serve.json"),
+                    default=None, metavar="PATH",
+                    help="run the continuous-batching serving rows (Poisson "
+                         "arrivals, sma vs fcfs scheduling) and write them "
+                         "as JSON (default path: BENCH_serve.json at the "
+                         "repo root)")
     ap.add_argument("--analyze", nargs="*", default=None, metavar="ARCH",
                     help="run the static plan verifier + SMA lint pass "
                          "(python -m repro.analysis) over the named "
@@ -199,6 +227,11 @@ def main() -> None:
 
 
 def _dispatch(args) -> None:
+    if args.bench_serve:
+        write_bench_json(args.bench_serve, check=args.bench_check,
+                         suite="serve")
+        return
+
     if args.bench_sharded:
         write_bench_json(args.bench_sharded, check=args.bench_check,
                          suite="sharded")

@@ -1,0 +1,198 @@
+"""Serving benchmark: continuous batching under Poisson arrivals.
+
+Drives one :class:`repro.serving.ServeEngine` per scheduler policy
+(``sma`` vs ``fcfs``) through the *same* seeded arrival schedule at three
+offered rates and reports, per ``rate x policy``:
+
+* ``rps``              — completed requests per wall-clock second,
+* ``p50_ms``/``p99_ms`` — end-to-end request latency percentiles,
+* ``switches_per_tok`` — realized scheduler mode switches per generated
+  token (the SMA cost model's figure of merit: every switch pays the
+  drain/reconfigure overhead of §4 of the paper).
+
+Engines are constructed once per policy and reused across rates —
+``reset()`` keeps the compiled (phase, batch-bucket) engine cache warm, so
+rows measure steady-state serving, not compilation.  Each rate's first run
+is a discarded warmup.
+
+Gates (``--bench-serve --bench-check``):
+
+* in-process: for every rate, ``sma.switches_per_tok`` must not exceed
+  ``fcfs.switches_per_tok`` — the mode-batching scheduler must never
+  schedule *worse* than naive FCFS;
+* cross-run: ``.rps`` rows are compared against the committed
+  ``BENCH_serve.json`` with a coarse slack (throughput must not collapse
+  vs the committed baseline; shared-runner jitter is expected, a
+  pathological scheduling or retrace regression is not).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+Row = Tuple[str, float, float]
+
+#: Offered load in expected requests per engine tick.
+RATES = (0.2, 0.5, 1.0)
+#: Requests per (rate, policy) measured run.
+N_REQUESTS = 12
+PROMPT_LEN = 8
+MAX_NEW = 8
+
+
+def _model():
+    import jax
+
+    import repro.configs as C
+    from repro.models import lm
+
+    cfg = dataclasses.replace(
+        C.reduced(C.get_config("stablelm-1.6b")), name="serve-bench")
+    params, _ = lm.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _engine(cfg, params, policy: str):
+    from repro.api import SMAOptions
+    from repro.serving import CacheConfig, SchedulerConfig, ServeEngine
+
+    return ServeEngine(
+        cfg, params,
+        cache=CacheConfig(block_size=4, num_blocks=64, max_seq_len=32),
+        max_batch=4, options=SMAOptions(backend="xla"),
+        sched=SchedulerConfig(policy=policy, prefill_chunk=4,
+                              max_prefill_batch=4, mode_min_run=6))
+
+
+def _requests(cfg, n: int, seed: int):
+    from repro.serving import Request
+
+    rng = np.random.RandomState(seed)
+    return [Request(rid=i,
+                    prompt=rng.randint(0, cfg.vocab_size,
+                                       size=(PROMPT_LEN,)).astype(np.int32),
+                    max_new_tokens=MAX_NEW)
+            for i in range(n)]
+
+
+def _arrival_schedule(rate: float, n: int, seed: int) -> Dict[int, int]:
+    """tick -> number of requests arriving, Poisson(rate) per tick."""
+    rng = np.random.RandomState(seed)
+    sched: Dict[int, int] = {}
+    placed, tick = 0, 0
+    while placed < n:
+        k = int(rng.poisson(rate))
+        k = min(k, n - placed)
+        if k:
+            sched[tick] = k
+        placed += k
+        tick += 1
+    return sched
+
+
+def _drive(eng, cfg, rate: float, *, seed: int) -> dict:
+    """One measured run: same seeded arrival schedule for every policy."""
+    reqs = _requests(cfg, N_REQUESTS, seed)
+    arrivals = _arrival_schedule(rate, N_REQUESTS, seed + 1)
+    it = iter(reqs)
+    tick = 0
+    t0 = time.perf_counter()
+    while True:
+        for _ in range(arrivals.get(tick, 0)):
+            eng.submit(next(it))
+        done_feeding = tick >= max(arrivals, default=0)
+        if done_feeding and not (eng.queue or eng.active):
+            break
+        eng.step()
+        tick += 1
+        assert tick < 5000, "serve bench failed to drain"
+    dt = time.perf_counter() - t0
+    assert all(r.status == "done" for r in reqs), [
+        (r.rid, r.status, r.error) for r in reqs if r.status != "done"]
+    lat_ms = sorted((r.t_last - r.t_submit) * 1e3 for r in reqs)
+
+    def pct(q: float) -> float:
+        return lat_ms[min(len(lat_ms) - 1,
+                          max(0, int(np.ceil(q * len(lat_ms))) - 1))]
+
+    tokens = sum(len(r.out_tokens) for r in reqs)
+    return {
+        "rps": len(reqs) / dt,
+        "p50_ms": pct(0.50),
+        "p99_ms": pct(0.99),
+        "switches_per_tok": eng.sched.switches / max(tokens, 1),
+        "tokens": tokens,
+        "ticks": tick,
+    }
+
+
+def serve_rows() -> List[Row]:
+    """All ``serve.rate<r>.<policy>.<metric>`` rows."""
+    cfg, params = _model()
+    engines = {p: _engine(cfg, params, p) for p in ("sma", "fcfs")}
+    rows: List[Row] = []
+    for rate in RATES:
+        for policy, eng in engines.items():
+            eng.reset()
+            _drive(eng, cfg, rate, seed=17)      # warmup: compile + trace
+            eng.reset()
+            m = _drive(eng, cfg, rate, seed=17)
+            tag = f"serve.rate{rate:g}.{policy}"
+            rows += [
+                (f"{tag}.rps", m["rps"], float(m["tokens"])),
+                (f"{tag}.p50_ms", m["p50_ms"], 0.0),
+                (f"{tag}.p99_ms", m["p99_ms"], 0.0),
+                (f"{tag}.switches_per_tok", m["switches_per_tok"],
+                 float(m["ticks"])),
+            ]
+    return rows
+
+
+def check_serve_rows(rows: List[Row]) -> int:
+    """In-process gate: SMA must not out-switch FCFS at any rate."""
+    by_name = {name: val for name, val, _ in rows}
+    bad = 0
+    for rate in RATES:
+        sma = by_name.get(f"serve.rate{rate:g}.sma.switches_per_tok")
+        fcfs = by_name.get(f"serve.rate{rate:g}.fcfs.switches_per_tok")
+        if sma is None or fcfs is None:
+            continue
+        ok = sma <= fcfs + 1e-9
+        print(f"# check serve.rate{rate:g}: sma {sma:.4f} switches/tok vs "
+              f"fcfs {fcfs:.4f} -> {'ok' if ok else 'REGRESSION'}")
+        bad += 0 if ok else 1
+    return bad
+
+
+def check_serve_baseline(rows: List[Row], baseline_path: str,
+                         *, slack: float = 3.0) -> int:
+    """Cross-run gate: throughput rows vs the committed baseline.
+
+    ``rps`` is better-is-bigger, so a violation is dropping below
+    ``baseline / slack``.  Latency and switch rows are informational
+    (covered by the in-process pairing above)."""
+    try:
+        with open(baseline_path) as f:
+            baseline = {r["name"]: r["us_per_call"]
+                        for r in json.load(f).get("rows", [])}
+    except (OSError, ValueError):
+        print(f"# no committed baseline at {baseline_path}; "
+              f"serve rows not gated")
+        return 0
+    bad = 0
+    for name, val, _ in rows:
+        if not name.endswith(".rps"):
+            continue
+        base = baseline.get(name)
+        if base is None:
+            print(f"# check {name}: no baseline row -> ok")
+            continue
+        ok = val >= base / slack
+        print(f"# check {name}: {val:.2f} rps vs committed {base:.2f} "
+              f"(slack x{slack}) -> {'ok' if ok else 'REGRESSION'}")
+        bad += 0 if ok else 1
+    return bad

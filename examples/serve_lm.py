@@ -1,14 +1,17 @@
 """Serving example: continuous batching over a trained model.
 
 Trains a tiny LM briefly (so generations aren't pure noise), then serves a
-stream of requests through the slot-based batched decoder — prefill-by-warmup,
-per-tick decode for all active slots, slot reuse as requests complete.
+stream of requests through :class:`repro.serving.ServeEngine` — chunked
+prefill over a paged KV cache, per-tick decode for all active rows, and an
+SMA-aware scheduler that batches same-mode work (systolic prefill vs SIMD
+decode) to keep mode switches low.  Requests are submitted mid-flight to
+exercise continuous admission.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py [--trace-out trace.json]
 
 ``--trace-out`` profiles the serve loop with ``repro.obs`` and writes a
-Perfetto-loadable Chrome trace (admit/warmup/tick spans, engine cache
-hits, per-mode kernel lanes).
+Perfetto-loadable Chrome trace (prefill/decode tick spans tagged with
+their execution mode, engine cache hits, per-mode kernel lanes).
 """
 import argparse
 import contextlib
@@ -20,8 +23,8 @@ import numpy as np
 import repro
 import repro.configs as C
 from repro.data.pipeline import _bigram_params
-from repro.launch.serve import Request, Server
 from repro.launch.train import TrainLoopConfig, train
+from repro.serving import CacheConfig, Request, SchedulerConfig, ServeEngine
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--trace-out", default=None, metavar="PATH",
@@ -35,16 +38,22 @@ cfg = dataclasses.replace(
     d_ff=256, vocab_size=256, dtype="float32", param_dtype="float32")
 print("[serve_lm] training a small model first (60 steps)...")
 # Backend selection goes through the one configuration path: an explicit
-# SMAOptions overlay for the server engine, and (equivalently) an ambient
-# repro.options(...) scope for the trainer.  (Runtime(backend=...) is a
-# deprecated shim.)
+# SMAOptions overlay for the engine, and (equivalently) an ambient
+# repro.options(...) scope for the trainer.
 with repro.options(backend="xla"):
     out = train(cfg, TrainLoopConfig(steps=60, seq_len=64, global_batch=8,
                                      log_every=30, peak_lr=3e-3))
 params = out["params"]
 
-server = Server(cfg, params, slots=4, cache_size=96,
-                options=repro.SMAOptions(backend="xla"))
+# Paged-cache sizing: each request needs ceil((prompt+max_new)/block_size)
+# blocks; 4 concurrent 16-token requests at block_size=8 fit comfortably
+# in 16 blocks.
+engine = ServeEngine(
+    cfg, params,
+    cache=CacheConfig(block_size=8, num_blocks=16, max_seq_len=96),
+    max_batch=4, options=repro.SMAOptions(backend="xla"),
+    sched=SchedulerConfig(policy="sma", prefill_chunk=8,
+                          max_prefill_batch=4, mode_min_run=4))
 # the trainer's data pipeline keys the bigram map off the *loop* seed (0)
 a, c = _bigram_params(0, cfg.vocab_size)
 rng = np.random.RandomState(0)
@@ -60,19 +69,27 @@ for i in range(8):
     requests.append(Request(rid=i, prompt=np.array(prompt, np.int32),
                             max_new_tokens=8))
 
+# Continuous batching: half the requests are queued up front, the rest
+# arrive while earlier ones are still decoding.
 pending = list(requests)
+for req in pending[:4]:
+    engine.submit(req)
+pending = pending[4:]
 t0 = time.time()
 ticks = 0
 with repro.profile(path=args.trace_out) if args.trace_out \
         else contextlib.nullcontext() as prof:
-    while pending or server.active:
-        while pending and server.admit(pending[0]):
-            pending.pop(0)
-        server.tick()
+    while pending or engine.queue or engine.active:
+        if pending and ticks % 3 == 0:
+            engine.submit(pending.pop(0))
+        engine.step()
         ticks += 1
 dt = time.time() - t0
+sched = engine.sched.stats()
 print(f"[serve_lm] served {len(requests)} requests in {ticks} ticks "
-      f"({dt:.1f}s)")
+      f"({dt:.1f}s); scheduler({sched['policy']}): "
+      f"{sched['mode_switches']} mode switches")
+print(f"[serve_lm] kv cache: {engine.kv.stats()}")
 if args.trace_out:
     print(f"[serve_lm] wrote trace -> {args.trace_out}")
     print(prof.timeline_text())

@@ -42,7 +42,8 @@ _OBS_EXPORTS = {"profile"}
 #: of the subsystem lives under ``repro.resilience``.
 _RESILIENCE_EXPORTS = {"inject_faults", "FaultSpec"}
 
-_SUBPACKAGES = ("analysis", "compiler", "backends", "obs", "resilience")
+_SUBPACKAGES = ("analysis", "compiler", "backends", "obs", "resilience",
+                "serving")
 
 __all__ = sorted(_API_EXPORTS | _OBS_EXPORTS | _RESILIENCE_EXPORTS) \
     + list(_SUBPACKAGES)

@@ -36,6 +36,7 @@ KERNEL_OPS = (
     "rmsnorm_gemm",
     "flash_attention",
     "decode_attention",
+    "paged_decode_attention",
     "rglru_scan",
     "mlstm_chunkwise",
 )

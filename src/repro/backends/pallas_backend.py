@@ -79,6 +79,26 @@ def _ops(interpret: bool):
         return _kernel(q, k_cache, v_cache, cache_len,
                        scale=scale, block_s=block_s, interpret=interpret)
 
+    def paged_decode_attention(q, k_pool, v_pool, block_table, q_pos,
+                               kv_len, *, window=None, scale=None,
+                               block_s=512):
+        # Constraints route chunked (C>1) and windowed sites to xla, so
+        # here q is (B, 1, Hq, D) and the site is plain decode: gather the
+        # request's pages into a contiguous per-request cache, then run the
+        # existing decode kernel (its cache_len block-skip becomes the
+        # page-tail skip).
+        del q_pos, window
+        from repro.kernels.decode_attention import \
+            decode_attention as _kernel
+        nb, hkv, bs, hd = k_pool.shape
+        b = q.shape[0]
+        bt = jnp.clip(block_table, 0, nb - 1)
+        k = k_pool[bt].transpose(0, 2, 1, 3, 4).reshape(b, hkv, -1, hd)
+        v = v_pool[bt].transpose(0, 2, 1, 3, 4).reshape(b, hkv, -1, hd)
+        out = _kernel(q[:, 0], k, v, kv_len.astype(jnp.int32),
+                      scale=scale, block_s=block_s, interpret=interpret)
+        return out[:, None]
+
     def rglru_scan(a, u, h0=None, *, block_s=256, block_d=256):
         from repro.kernels.rglru import rglru_scan as _kernel
         return _kernel(a, u, h0, block_s=block_s, block_d=block_d,
@@ -96,6 +116,7 @@ def _ops(interpret: bool):
         "rmsnorm_gemm": rmsnorm_gemm,
         "flash_attention": flash_attention,
         "decode_attention": decode_attention,
+        "paged_decode_attention": paged_decode_attention,
         "rglru_scan": rglru_scan,
         "mlstm_chunkwise": mlstm_chunkwise,
     }
@@ -128,8 +149,16 @@ def _constraints(hardware: bool):
             why = _mod.mxu_constraints(site)
         return why
 
+    def paged_decode_attention(site: OpSite):
+        import repro.kernels.decode_attention as _mod  # module, not the fn
+        why = _mod.paged_constraints(site)
+        if why is None and hardware:
+            why = _mod.mxu_constraints(site)
+        return why
+
     return {
         "decode_attention": decode_attention,
+        "paged_decode_attention": paged_decode_attention,
         "rglru_scan": rglru_scan,
         "flash_attention": flash_attention,
         "mlstm_chunkwise": mlstm_chunkwise,

@@ -231,6 +231,14 @@ def _op_decode_attention(q, k_cache, v_cache, cache_len, *, scale=None,
                                      scale=scale)
 
 
+def _op_paged_decode_attention(q, k_pool, v_pool, block_table, q_pos,
+                               kv_len, *, window=None, scale=None,
+                               block_s=512):
+    del block_s  # kernel-backend tiling knob
+    return _ref.paged_attention_ref(q, k_pool, v_pool, block_table, q_pos,
+                                    kv_len, window=window, scale=scale)
+
+
 def _op_rglru_scan(a, u, h0=None, *, block_s=256, block_d=256):
     del block_s, block_d
     return assoc_rglru(a, u, h0)
@@ -249,6 +257,7 @@ XLA = Backend(
         "rmsnorm_gemm": _op_rmsnorm_gemm,
         "flash_attention": _op_flash_attention,
         "decode_attention": _op_decode_attention,
+        "paged_decode_attention": _op_paged_decode_attention,
         "rglru_scan": _op_rglru_scan,
         "mlstm_chunkwise": _op_mlstm_chunkwise,
     },

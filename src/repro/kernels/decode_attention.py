@@ -144,3 +144,23 @@ def mxu_constraints(site) -> Optional[str]:
         return (f"shape:head_dim {d} not MXU-aligned "
                 f"(hardware decode kernel needs d % 64 == 0)")
     return None
+
+
+def paged_constraints(site) -> Optional[str]:
+    """Capability gate for ``paged_decode_attention`` on the kernel
+    backends (both hardware and interpret).
+
+    The kernel path gathers a request's pages and reuses this module's
+    single-token decode kernel, so it only takes plain decode sites: a
+    chunked-prefill tile (C > 1 query tokens) or a sliding-window site
+    needs per-query causal/window masking the decode kernel does not
+    express — those resolve down the ladder to the grouped-head SIMD path.
+    """
+    c = site.shapes[0][1]
+    if c != 1:
+        return (f"shape:chunked prefill tile (C={c}) needs per-query "
+                f"masking (single-token decode kernel only)")
+    if site.extra("window") is not None:
+        return ("param:sliding-window masking runs on the SIMD paged "
+                "path")
+    return None

@@ -1,359 +1,136 @@
-"""Serving driver: batched prefill + decode with a slot-based scheduler.
+"""DEPRECATED serving driver — a shim over :mod:`repro.serving`.
 
-A miniature continuous-batching server: a fixed pool of B decode slots; new
-requests warm up into a free slot by stepping their prompt through the
-decode path (every family also supports batched ``lm.prefill``; the tests
-assert the two agree); every engine tick decodes one token for all active
-slots.  Greedy or temperature sampling.
+The slot-based ``Server`` grew into the continuous-batching
+:class:`repro.serving.ServeEngine` (paged KV cache, chunked prefill, SMA
+mode-batching scheduler).  This module keeps the old surface working for
+one release: ``Server`` delegates every operation to a ``ServeEngine``
+configured for slot-equivalent behaviour —
 
-The decode step runs through ``repro.sma_jit``: ONE engine serves every
-slot and every tick — the first call compiles (trace → plan → rewrite →
-dispatch, plus XLA jit), every subsequent warmup step and tick with the
-same abstract signature is a cache hit with zero re-trace/re-plan work.
-``Server.engine.stats`` exposes the hit/miss counters the system tests
-assert on.
+* ``slots`` rows, each able to hold a full ``cache_size`` token budget in
+  KV blocks (so admission succeeds exactly when a slot is free, like the
+  old dense per-slot cache);
+* ``admit`` runs the whole prompt prefill before returning and emits no
+  token (the old warmup), ``tick`` decodes one token for every active
+  request and re-feeds the last prompt token first (the old first-tick
+  semantics) — outputs are tick-for-tick compatible;
+* the same fault sites (``serve.admit`` / ``serve.tick``), ``serve.*``
+  counters, retry/evict/watchdog behaviour, and legacy trace span names.
 
-Failure isolation (the serving half of :mod:`repro.resilience`): requests
-are validated at admission — empty prompts and prompts that cannot fit the
-KV cache are rejected with a clear error instead of silently overflowing —
-and contained per-slot at decode time: a slot whose logits go non-finite
-keeps its previous state (masked state merge, same mechanism as warmup) and
-retries under a bounded :class:`~repro.resilience.guard.RetryPolicy`; past
-its budget the request is evicted (marked ``failed``, slot zeroed) while
-every other slot keeps decoding.  A soft watchdog counts ticks that overrun
-``RetryPolicy.deadline_s`` (an XLA launch cannot be preempted mid-flight).
+Each ``Server`` construction emits one :class:`DeprecationWarning` pointed
+at the caller.  Migrate to::
 
-This is the serving analogue of the paper's end-to-end story: the decode
-step's per-request variable lengths and sampling are SIMD-mode work riding
-the same program as the systolic projections.
+    from repro.serving import ServeEngine, Request
+    eng = ServeEngine(cfg, params, ...)
+    eng.submit(Request(rid=0, prompt=..., max_new_tokens=8))
+    while eng.queue or eng.active:
+        eng.step()
 """
 from __future__ import annotations
 
 import argparse
 import contextlib
-import dataclasses
 import time
 from typing import Dict, List, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.api import SMAOptions, sma_jit
+from repro._deprecation import warn_deprecated
+from repro.api import SMAOptions
 from repro.configs.base import ModelConfig, get_config, reduced
 from repro.models import lm
 from repro.models.layers import Runtime
-from repro.obs import metrics as _metrics
 from repro.obs import trace as _obs_trace
-from repro.resilience import faults as _faults
-from repro.resilience.guard import (RetryPolicy, is_runtime_failure,
-                                    record_event, warn_once)
+from repro.resilience.guard import RetryPolicy
+from repro.serving import CacheConfig, Request, ServeEngine
 
+__all__ = ["Request", "Server", "main"]
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray           # (S,) int32
-    max_new_tokens: int = 16
-    out_tokens: Optional[List[int]] = None
-    slot: int = -1
-    #: ``pending`` → ``active`` → ``done`` | ``failed`` (rejected at admit
-    #: or evicted mid-decode; ``error`` says why).
-    status: str = "pending"
-    error: Optional[str] = None
-    retries: int = 0
+#: Block size the shim provisions its slot-equivalent pools with.
+_BLOCK = 16
 
 
 class Server:
-    """Slot-based batched decoder over one model."""
+    """Deprecated slot-based facade over :class:`ServeEngine`."""
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  cache_size: int = 256, rt: Optional[Runtime] = None,
                  options: Optional[SMAOptions] = None,
                  temperature: float = 0.0, seed: int = 0,
                  retry: Optional[RetryPolicy] = None) -> None:
+        warn_deprecated(
+            "repro.launch.serve.Server is deprecated; use "
+            "repro.serving.ServeEngine (continuous batching over a paged "
+            "KV cache) instead")
         self.cfg = cfg
-        self.params = params
-        self.rt = rt or Runtime(remat=False)
         self.slots = slots
         self.cache_size = cache_size
-        self.temperature = temperature
-        self.key = jax.random.PRNGKey(seed)
-        self.state = lm.init_state(cfg, slots, cache_size)
-        self.cache_len = jnp.zeros((slots,), jnp.int32)
-        self.active: Dict[int, Request] = {}
-        self.done: Dict[int, Request] = {}
-        self.failed: Dict[int, Request] = {}
-        self.retry = retry or RetryPolicy()
-        # Engine configuration: ``options`` (overlaid on any ambient
-        # ``repro.options(...)`` at call time) is the supported path; the
-        # deprecated Runtime.backend/.interpret fields are folded in
-        # underneath for one release of back-compat.
-        legacy = SMAOptions(backend=self.rt.backend,
-                            interpret=self.rt.interpret or None)
-        self.options = legacy.overlay(options).replace(jit=True)
-        # The single decode entry point: warmup and tick share this engine,
-        # so after the first call every step is a compile-cache hit (the
-        # engine would also transparently handle new signatures, e.g. a
-        # multi-token speculative batch, by compiling them once).
-        self.engine = sma_jit(
-            lambda p, s, cl, b: lm.decode_step(p, s, cl, cfg, self.rt, b),
-            options=self.options,
-            name=f"{cfg.name}.decode_step")
+        # Slot-equivalent provisioning: every slot can hold a full
+        # cache_size budget, so block pressure never rejects a request the
+        # old dense per-slot cache would have taken.
+        blocks_per_slot = -(-cache_size // _BLOCK)
+        cache = CacheConfig(block_size=_BLOCK,
+                            num_blocks=slots * blocks_per_slot,
+                            max_seq_len=cache_size)
+        self.core = ServeEngine(cfg, params, cache=cache, max_batch=slots,
+                                rt=rt, options=options,
+                                temperature=temperature, seed=seed,
+                                retry=retry)
 
-    # ------------------------------------------------------------------ slots
+    # ------------------------------------------------------ old surface
+    @property
+    def params(self):
+        return self.core.params
+
+    @property
+    def rt(self) -> Runtime:
+        return self.core.rt
+
+    @property
+    def active(self) -> Dict[int, Request]:
+        return self.core.active
+
+    @property
+    def done(self) -> Dict[int, Request]:
+        return self.core.done
+
+    @property
+    def failed(self) -> Dict[int, Request]:
+        return self.core.failed
+
+    @property
+    def retry(self) -> RetryPolicy:
+        return self.core.retry
+
+    @property
+    def temperature(self) -> float:
+        return self.core.temperature
+
+    @property
+    def cache_len(self):
+        return self.core.cache_len
+
+    @property
+    def engine(self):
+        """The decode-phase ``sma_jit`` engine (stats/cache accessors)."""
+        return self.core.engines["decode"]
+
     def free_slots(self) -> List[int]:
-        used = {r.slot for r in self.active.values()}
-        return [i for i in range(self.slots) if i not in used]
+        return self.core.free_rows()
 
     def admit(self, req: Request) -> bool:
-        """Admit ``req`` into a free slot (validating it first).
+        """Old admission contract: True when the request was consumed
+        (admitted with its prompt fully prefilled, trivially completed, or
+        rejected as ``failed``); False only when no slot is free."""
+        return self.core.admit_sync(req)
 
-        Returns True when the request was *consumed* — admitted, trivially
-        completed (``max_new_tokens <= 0``), or rejected as ``failed``
-        (invalid prompt / KV-cache overflow / warmup failure) — and False
-        only when no slot is free, so the standard
-        ``while pending and server.admit(pending[0]): pending.pop(0)``
-        drain loop never spins on a poisoned request.
-        """
-        # Validation BEFORE taking a slot: the KV-cache bound used to
-        # overflow silently (the decode mask just stopped attending), now it
-        # is a clear rejection at the door.
-        budget = len(req.prompt) + max(req.max_new_tokens, 0)
-        if len(req.prompt) == 0:
-            self._fail(req, "empty prompt (nothing to decode from)")
-            return True
-        if budget > self.cache_size:
-            self._fail(req,
-                       f"request needs {budget} KV-cache positions "
-                       f"(prompt {len(req.prompt)} + max_new_tokens "
-                       f"{req.max_new_tokens}) but cache_size is "
-                       f"{self.cache_size}")
-            return True
-        if req.max_new_tokens <= 0:
-            req.out_tokens = []
-            req.status = "done"
-            self.done[req.rid] = req
-            return True
-        free = self.free_slots()
-        if not free:
-            return False
-        t0 = time.perf_counter()
-        with _obs_trace.span("serve.admit", cat="serve", rid=req.rid,
-                             slot=free[0], prompt_len=len(req.prompt)):
-            req.slot = free[0]
-            req.out_tokens = []
-            req.status = "active"
-            self.active[req.rid] = req
-            try:
-                _faults.maybe_raise("serve.admit")
-                self._warmup(req)
-            except Exception as exc:
-                if not is_runtime_failure(exc):
-                    raise
-                self._evict(req, f"warmup failed: "
-                                 f"{type(exc).__name__}: {exc}")
-        self._watchdog("serve.admit", time.perf_counter() - t0)
-        return True
-
-    def _warmup(self, req: Request) -> None:
-        """Feed the prompt token-by-token into the request's slot.
-
-        Decode-path warmup works uniformly for every family (attention KV
-        caches, RG-LRU/mLSTM/sLSTM states).  ``lm.prefill`` computes the same
-        state in one batched pass (tests assert equivalence); per-slot warmup
-        is used here because slots admit at different times.
-        """
-        with _obs_trace.span("serve.warmup", cat="serve", rid=req.rid,
-                             slot=req.slot, tokens=len(req.prompt)):
-            self._zero_slot(req.slot)
-            for tok in req.prompt:
-                batch = self._one_hot_batch(req.slot, int(tok))
-                _, self.state, self.cache_len = self._step_slotwise(
-                    req.slot, batch)
-
-    def _zero_slot(self, slot: int) -> None:
-        """Reset one slot's recurrent state / KV cache to zeros."""
-        self.cache_len = self.cache_len.at[slot].set(0)
-        self.state = jax.tree.map(
-            lambda s: s.at[:, slot].set(jnp.zeros_like(s[:, slot]))
-            if s.ndim >= 2 else s, self.state)
-
-    def _token_embeds(self, toks: jax.Array) -> jax.Array:
-        """Look up decoder-input embeddings for a ``(slots, 1)`` token batch.
-
-        Embeds-mode families (e.g. musicgen-large) take continuous inputs,
-        so the server must embed the tokens itself: use the model's own
-        ``embed`` table when the checkpoint has one, else a deterministic
-        one-hot encoding (token id mod d_model) so distinct tokens still
-        produce distinct inputs rather than all-zeros.
-        """
-        table = self.params.get("embed")
-        if table is not None:
-            return table["table"].astype(
-                self.cfg.activation_dtype)[toks]
-        return jax.nn.one_hot(toks % self.cfg.d_model, self.cfg.d_model,
-                              dtype=self.cfg.activation_dtype)
-
-    def _one_hot_batch(self, slot: int, token: int) -> Dict[str, jax.Array]:
-        toks = jnp.zeros((self.slots, 1), jnp.int32).at[slot, 0].set(token)
-        if self.cfg.input_mode == "embeds":
-            return {"embeds": self._token_embeds(toks)}
-        return {"tokens": toks}
-
-    def _step_slotwise(self, slot, batch):
-        """One decode step that only advances ``slot`` (admission warmup).
-
-        Routed through the SAME engine cache as :meth:`tick` — the batch
-        signature is identical, so per-slot warmup never re-traces.
-        """
-        logits, new_state, new_len = self.engine(
-            self.params, self.state, self.cache_len, batch)
-        # only the admitted slot advances during warmup
-        keep = jnp.arange(self.slots) == slot
-        state = jax.tree.map(
-            lambda new, old: jnp.where(
-                keep.reshape((1, -1) + (1,) * (new.ndim - 2)), new, old),
-            new_state, self.state)
-        cache_len = jnp.where(keep, new_len, self.cache_len)
-        return logits, state, cache_len
-
-    # ------------------------------------------------------------------- tick
     def tick(self) -> Dict[int, int]:
-        """Decode one token for every active request.
-
-        Failure-isolated: a runtime failure of the batched engine call, or a
-        single slot producing non-finite logits, costs the affected
-        request(s) one retry (bounded by :class:`RetryPolicy`) and — past
-        the budget — an eviction; every healthy slot keeps decoding.
-        """
-        if not self.active:
+        """Decode one token for every active request."""
+        if not self.core.active:
             return {}
-        t0 = time.perf_counter()
         with _obs_trace.span("serve.tick", cat="serve",
-                             active=len(self.active)):
-            try:
-                _faults.maybe_raise("serve.tick")
-                out = self._tick()
-            except Exception as exc:
-                if not is_runtime_failure(exc):
-                    raise
-                self._tick_failed(exc)
-                out = {}
-        self._watchdog("serve.tick", time.perf_counter() - t0)
-        return out
-
-    def _tick(self) -> Dict[int, int]:
-        # Defense in depth behind the admit-time budget check: a slot whose
-        # cache filled up anyway (e.g. state poked by a test/chaos harness)
-        # is evicted with a clear error instead of writing out of bounds.
-        lens = np.asarray(self.cache_len)
-        for req in list(self.active.values()):
-            if int(lens[req.slot]) >= self.cache_size:
-                self._evict(req, f"KV cache exhausted mid-decode "
-                                 f"(cache_size={self.cache_size})")
-        if not self.active:
-            return {}
-        # last generated (or last prompt) token per slot
-        toks = np.zeros((self.slots, 1), np.int32)
-        for req in self.active.values():
-            last = (req.out_tokens[-1] if req.out_tokens
-                    else int(req.prompt[-1]))
-            toks[req.slot, 0] = last
-        batch = {"tokens": jnp.asarray(toks)} \
-            if self.cfg.input_mode != "embeds" else \
-            {"embeds": self._token_embeds(jnp.asarray(toks))}
-        logits, new_state, new_len = self.engine(
-            self.params, self.state, self.cache_len, batch)
-        np_logits = np.asarray(logits, np.float32)
-        # Containment: slots whose logits went non-finite are poisoned —
-        # merge the batched step so ONLY healthy slots advance (the same
-        # masked merge warmup uses), then charge the poisoned requests a
-        # retry.  Healthy slots are never held back by a sick neighbour.
-        bad = [req for req in self.active.values()
-               if not np.isfinite(np_logits[req.slot]).all()]
-        if bad:
-            keep = jnp.asarray(
-                [all(r.slot != i for r in bad) for i in range(self.slots)])
-            self.state = jax.tree.map(
-                lambda new, old: jnp.where(
-                    keep.reshape((1, -1) + (1,) * (new.ndim - 2)), new, old),
-                new_state, self.state)
-            self.cache_len = jnp.where(keep, new_len, self.cache_len)
-            for req in bad:
-                self._charge_retry(req, "non-finite logits")
-        else:
-            self.state, self.cache_len = new_state, new_len
-        out: Dict[int, int] = {}
-        bad_rids = {r.rid for r in bad}
-        for rid, req in list(self.active.items()):
-            if rid in bad_rids:
-                continue
-            if self.temperature > 0:
-                self.key, sub = jax.random.split(self.key)
-                row = np_logits[req.slot] / self.temperature
-                tok = int(jax.random.categorical(sub, jnp.asarray(row)))
-            else:
-                tok = int(np.argmax(np_logits[req.slot]))
-            req.out_tokens.append(tok)
-            out[rid] = tok
-            if len(req.out_tokens) >= req.max_new_tokens:
-                req.status = "done"
-                self.done[rid] = req
-                del self.active[rid]
-        return out
-
-    # -------------------------------------------------------- failure paths
-    def _tick_failed(self, exc: BaseException) -> None:
-        """The whole batched step failed (engine runtime error / injected
-        chaos): charge every active request one retry, back off, and let the
-        next tick re-attempt from the unchanged pre-tick state."""
-        _metrics.inc("serve.tick_failures")
-        record_event("serve_tick_failed", error=str(exc),
-                     active=len(self.active))
-        warn_once(f"serve_tick:{type(exc).__name__}",
-                  f"serve tick failed ({type(exc).__name__}: {exc}); "
-                  f"retrying active requests (bounded by RetryPolicy)")
-        for req in list(self.active.values()):
-            self._charge_retry(req, f"tick failed: "
-                                    f"{type(exc).__name__}: {exc}")
-        if self.retry.backoff_s > 0:
-            time.sleep(self.retry.backoff_s)
-
-    def _charge_retry(self, req: Request, why: str) -> None:
-        req.retries += 1
-        _metrics.inc("serve.retries")
-        if req.retries > self.retry.max_retries:
-            self._evict(req, f"{why} (after {req.retries - 1} retries)")
-
-    def _evict(self, req: Request, error: str) -> None:
-        """Remove a poisoned request mid-decode: zero its slot (so the next
-        admit starts clean) and mark it failed."""
-        self.active.pop(req.rid, None)
-        if req.slot >= 0:
-            self._zero_slot(req.slot)
-        _metrics.inc("serve.evictions")
-        record_event("serve_evicted", rid=req.rid, slot=req.slot,
-                     error=error)
-        self._fail(req, error)
-
-    def _fail(self, req: Request, error: str) -> None:
-        req.status = "failed"
-        req.error = error
-        self.failed[req.rid] = req
-        _metrics.inc("serve.requests_failed")
-
-    def _watchdog(self, what: str, elapsed_s: float) -> None:
-        """Soft deadline: XLA launches cannot be preempted, so an overrun is
-        counted and warned (once per site), not interrupted."""
-        deadline = self.retry.deadline_s
-        if deadline is None or elapsed_s <= deadline:
-            return
-        _metrics.inc("serve.watchdog_exceeded")
-        warn_once(f"serve_watchdog:{what}",
-                  f"{what} took {elapsed_s:.3f}s "
-                  f"(RetryPolicy.deadline_s={deadline}); the launch cannot "
-                  f"be preempted — counted as serve.watchdog_exceeded")
+                             active=len(self.core.active)):
+            return self.core.decode_tick()
 
 
 def main() -> None:
@@ -373,42 +150,33 @@ def main() -> None:
     if args.reduced:
         cfg = reduced(cfg)
     params, _ = lm.init(jax.random.PRNGKey(0), cfg)
-    server = Server(cfg, params, slots=args.slots,
-                    temperature=args.temperature)
+    engine = ServeEngine(cfg, params, max_batch=args.slots,
+                         temperature=args.temperature)
 
     rng = np.random.RandomState(0)
-    pending = [Request(rid=i,
-                       prompt=rng.randint(0, cfg.vocab_size, size=(6,))
-                       .astype(np.int32),
-                       max_new_tokens=args.max_new)
-               for i in range(args.requests)]
+    for i in range(args.requests):
+        req = Request(rid=i,
+                      prompt=rng.randint(0, cfg.vocab_size, size=(6,))
+                      .astype(np.int32),
+                      max_new_tokens=args.max_new)
+        status = engine.submit(req)
+        if status == "failed":
+            print(f"[serve] rejected request {req.rid}: {req.error}")
     t0 = time.time()
-    ticks = 0
     with _obs_trace.profile(path=args.trace_out) if args.trace_out \
             else contextlib.nullcontext() as prof:
-        while len(server.done) + len(server.failed) < args.requests:
-            while pending and server.admit(pending[0]):
-                req = pending.pop(0)
-                if req.status == "failed":
-                    print(f"[serve] rejected request {req.rid}: "
-                          f"{req.error}")
-                elif req.status == "done":
-                    print(f"[serve] request {req.rid} trivially done "
-                          f"(max_new_tokens=0)")
-                else:
-                    print(f"[serve] admitted request {req.rid} "
-                          f"-> slot {req.slot}")
-            if server.active:
-                server.tick()
-                ticks += 1
+        ticks = engine.run()
     dt = time.time() - t0
-    print(f"[serve] {len(server.done)} done / {len(server.failed)} failed "
+    print(f"[serve] {len(engine.done)} done / {len(engine.failed)} failed "
           f"of {args.requests} requests, {ticks} engine ticks, "
           f"{dt:.2f}s ({ticks / max(dt, 1e-9):.1f} ticks/s)")
-    st = server.engine.stats
-    print(f"[serve] engine cache: {st.hits} hits / {st.misses} compiles, "
-          f"compile {st.compile_time_s:.2f}s "
-          f"({st.amortized_compile_s * 1e3:.2f} ms/call amortized)")
+    sched = engine.sched.stats()
+    print(f"[serve] scheduler({sched['policy']}): {sched['ticks']} ticks, "
+          f"{sched['mode_switches']} mode switches")
+    for name, eng in engine.engines.items():
+        st = eng.stats
+        print(f"[serve] {name} engine cache: {st.hits} hits / "
+              f"{st.misses} compiles, compile {st.compile_time_s:.2f}s")
     if args.trace_out:
         print(f"[serve] wrote trace -> {args.trace_out}")
         print(prof.timeline_text())

@@ -19,20 +19,37 @@ Producers across the stack feed it:
 """
 from __future__ import annotations
 
+import collections
 import threading
-from typing import Any, Dict
+from typing import Any, Deque, Dict
 
 __all__ = ["MetricsRegistry", "METRICS", "inc", "get", "observe", "snapshot",
            "reset"]
 
+#: Bounded reservoir per histogram for percentile estimates: serving wants
+#: p50/p99 latencies without unbounded memory, so each histogram keeps the
+#: most recent SAMPLE_CAP observations (a sliding window, which for latency
+#: monitoring is usually *more* useful than all-of-history).
+SAMPLE_CAP = 2048
+
+
+def _percentile(sorted_vals, q: float) -> float:
+    """Nearest-rank percentile over an already-sorted sample list."""
+    if not sorted_vals:
+        return 0.0
+    k = min(len(sorted_vals) - 1, max(0, int(q * len(sorted_vals))))
+    return sorted_vals[k]
+
 
 class MetricsRegistry:
-    """Named counters (monotonic ints) + histograms (count/total/min/max)."""
+    """Named counters (monotonic ints) + histograms (count/total/min/max,
+    plus sliding-window p50/p99 in :meth:`snapshot`)."""
 
     def __init__(self) -> None:
         self._lock = threading.Lock()
         self._counters: Dict[str, float] = {}
         self._hists: Dict[str, Dict[str, float]] = {}
+        self._samples: Dict[str, Deque[float]] = {}
 
     def inc(self, name: str, n: float = 1) -> None:
         with self._lock:
@@ -51,25 +68,33 @@ class MetricsRegistry:
             if h is None:
                 self._hists[name] = {"count": 1, "total": value,
                                      "min": value, "max": value}
+                self._samples[name] = collections.deque(maxlen=SAMPLE_CAP)
             else:
                 h["count"] += 1
                 h["total"] += value
                 h["min"] = min(h["min"], value)
                 h["max"] = max(h["max"], value)
+            self._samples[name].append(value)
 
     def snapshot(self) -> Dict[str, Any]:
         """A JSON-safe point-in-time copy: ``{"counters": {...},
-        "histograms": {name: {count, total, mean, min, max}}}``."""
+        "histograms": {name: {count, total, mean, min, max, p50, p99}}}``
+        (percentiles over the last :data:`SAMPLE_CAP` observations)."""
         with self._lock:
             counters = dict(self._counters)
-            hists = {name: {**h, "mean": h["total"] / h["count"]}
-                     for name, h in self._hists.items()}
+            hists = {}
+            for name, h in self._hists.items():
+                vals = sorted(self._samples.get(name, ()))
+                hists[name] = {**h, "mean": h["total"] / h["count"],
+                               "p50": _percentile(vals, 0.50),
+                               "p99": _percentile(vals, 0.99)}
         return {"counters": counters, "histograms": hists}
 
     def reset(self) -> None:
         with self._lock:
             self._counters.clear()
             self._hists.clear()
+            self._samples.clear()
 
 
 #: The process-wide registry every producer in the stack feeds.

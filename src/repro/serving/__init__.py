@@ -1,0 +1,27 @@
+"""repro.serving — continuous-batching engine over a paged KV cache.
+
+The production serving subsystem: :class:`ServeEngine` drives chunked
+prefill and batched decode through per-phase ``sma_jit`` engines, with KV
+storage in fixed-size pool blocks (:class:`PagedKVCache`) and tick phases
+chosen by the SMA-aware mode-batching scheduler (:class:`ModeScheduler`) —
+prefill is systolic-mode work, decode is SIMD-mode work, and grouping
+same-mode ticks is what keeps the temporal substrate's mode switches rare.
+
+The old slot-based ``repro.launch.serve.Server`` is a deprecation shim
+over this package.
+"""
+from repro.serving.engine import Request, ServeEngine
+from repro.serving.kv_cache import BlockAllocator, CacheConfig, PagedKVCache
+from repro.serving.scheduler import (ModeScheduler, SchedulerConfig,
+                                     TickPlan)
+
+__all__ = [
+    "BlockAllocator",
+    "CacheConfig",
+    "ModeScheduler",
+    "PagedKVCache",
+    "Request",
+    "SchedulerConfig",
+    "ServeEngine",
+    "TickPlan",
+]

@@ -450,12 +450,14 @@ class TestServeChaos:
                      max_new_tokens=4)
         assert server.admit(r0) and server.admit(r1)
         server.tick()
-        # poison r1's slot state (axis 1 is the slot axis)
-        bad = r1.slot
-        server.state = jax.tree.map(
-            lambda s: s.at[:, bad].set(jnp.nan)
-            if (s.ndim >= 2 and jnp.issubdtype(s.dtype, jnp.inexact))
-            else s, server.state)
+        # poison r1's KV blocks in the paged pools (the paged analogue of
+        # the old per-slot state poke)
+        core = server.core
+        blocks = jnp.asarray(core.kv.blocks_of(r1.slot))
+        core.state = tuple(
+            jax.tree.map(lambda s: s.at[:, blocks].set(jnp.nan), entry)
+            if p in core._pooled else entry
+            for p, entry in enumerate(core.state))
         evictions_before = metrics.get("serve.evictions")
         with warnings.catch_warnings():
             warnings.simplefilter("ignore", RuntimeWarning)
